@@ -1,0 +1,28 @@
+"""Paper Fig. 3 analogue: communication volume per solve, unified vs zerocopy.
+
+The paper measures page faults from UM thrashing; the structural cause is
+cut-oblivious dense traffic. We report the predicted collective payload per
+solve (bytes) for 2/4/8 devices — no devices needed (plan-level analysis).
+Derived: volume ratio unified/zerocopy (the thrashing-elimination factor).
+"""
+from __future__ import annotations
+
+from benchmarks.common import bench_scale, emit
+from repro.core import SolverConfig, build_plan
+from repro.sparse.suite import table1_suite
+
+
+def main() -> None:
+    for entry in table1_suite(bench_scale()):
+        a = entry.build()
+        for D in (2, 4, 8):
+            un = build_plan(a, D, SolverConfig(block_size=16, comm="unified"))
+            zc = build_plan(a, D, SolverConfig(block_size=16, comm="zerocopy",
+                                               partition="taskpool"))
+            ratio = un.comm_bytes_per_solve / max(1, zc.comm_bytes_per_solve)
+            emit(f"fig3/{entry.name}/{D}dev", float(zc.comm_bytes_per_solve),
+                 f"unified_over_zerocopy={ratio:.1f}")
+
+
+if __name__ == "__main__":
+    main()

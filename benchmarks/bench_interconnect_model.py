@@ -1,0 +1,37 @@
+"""Paper Fig. 8 analogue: interconnect sensitivity of the collective term.
+
+DGX-1 (NVLink 64 GB/s) vs DGX-2 (NVSwitch ~100 GB/s) vs TPU v5e ICI
+(~50 GB/s/link): with compute/communication overlap, the solver is
+insensitive to link bandwidth once the collective term is below the compute
+term — the paper's observation that DGX-1 and DGX-2 see the same speedup.
+Derived: collective_term_us per interconnect and whether comm is hidden.
+"""
+from __future__ import annotations
+
+from benchmarks.common import bench_scale, emit
+from repro.core import SolverConfig, build_plan
+from repro.sparse.suite import table1_suite
+
+LINKS = {"nvlink64": 64e9, "nvswitch100": 100e9, "tpu_ici50": 50e9}
+TRSV_FLOPS_PER_BLOCKROW = None  # computed from plan
+
+
+def main() -> None:
+    for entry in table1_suite(bench_scale()):
+        a = entry.build()
+        plan = build_plan(a, 4, SolverConfig(block_size=16, comm="zerocopy",
+                                             partition="taskpool"))
+        B = plan.bs.B
+        # compute term: block TRSV + tile GEMVs spread over 4 devices @197TF bf16
+        flops = (plan.bs.nb * B * B + plan.bs.n_tiles * 2 * B * B) / 4
+        compute_us = flops / 197e12 * 1e6
+        comm_bytes = plan.comm_bytes_per_solve
+        for name, bw in LINKS.items():
+            comm_us = comm_bytes / bw * 1e6
+            hidden = comm_us <= compute_us * (plan.n_levels - 1) / max(1, plan.n_levels)
+            emit(f"fig8/{entry.name}/{name}", comm_us,
+                 f"comm_hidden_by_compute={hidden}")
+
+
+if __name__ == "__main__":
+    main()

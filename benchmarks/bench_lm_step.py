@@ -1,0 +1,40 @@
+"""LM substrate micro-bench: reduced-config train/decode step wall time.
+
+Not a paper figure — sanity numbers proving the training/serving substrate
+runs end-to-end on CPU for every architecture family in the pool.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_call
+
+ARCHS = ["llama3.2-1b", "gemma2-2b", "falcon-mamba-7b", "zamba2-7b",
+         "llama4-maverick-400b-a17b", "seamless-m4t-medium"]
+
+
+def main() -> None:
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.data import SyntheticLM
+    from repro.models import init_params
+    from repro.train.optim import adamw_init
+    from repro.train.step import make_train_step
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    for arch in ARCHS:
+        cfg = get_reduced(arch)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        opt = adamw_init(params)
+        data = SyntheticLM(cfg, 2, 32)
+        step = make_train_step(cfg, mesh, example_params=params, example_opt=opt,
+                               example_batch=data.batch(0), donate=False)
+        us = time_call(lambda: step(params, opt, data.batch(0), np.int32(0)),
+                       warmup=1, iters=3)
+        emit(f"lm_train_step/{arch}", us, "reduced_config")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Fig. 10: strong scaling of zerocopy SpTRSV, 1..8 devices.
+
+Normalized (derived column) to the single-device level-set solver — the
+paper's cusparse_csrsv2 analogue. Total tasks fixed at 32 (paper §VI-D).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import bench_scale, emit, time_call
+from repro.core import DistributedSolver, SolverConfig, build_plan, solve_local
+from repro.core.blocking import pad_rhs
+from repro.sparse.suite import table1_suite
+
+FOCUS = ("nlpkkt160", "Wordnet3", "chipcool0", "webbase-1M", "dc2")
+
+
+def main() -> None:
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    max_d = int(os.environ.get("REPRO_BENCH_MAXDEV", "8"))
+    for entry in [e for e in table1_suite(bench_scale()) if e.name in FOCUS]:
+        a = entry.build()
+        plan1 = build_plan(a, 1, SolverConfig(block_size=16))
+        b = jnp.asarray(pad_rhs(np.random.default_rng(0).uniform(-1, 1, a.n), plan1.bs))
+        single = jax.jit(functools.partial(solve_local, plan1))
+        base_us = time_call(single, b)
+        emit(f"fig10/{entry.name}/1dev", base_us, "speedup_vs_1dev=1.00")
+        for D in (2, 4, 8):
+            if D > max_d or D > len(jax.devices()):
+                continue
+            total_tasks = 32
+            cfg = SolverConfig(block_size=16, comm="zerocopy", partition="taskpool",
+                               tasks_per_device=max(1, total_tasks // D))
+            mesh = jax.make_mesh((D,), ("x",), devices=jax.devices()[:D],
+                                 axis_types=(jax.sharding.AxisType.Auto,))
+            solver = DistributedSolver(build_plan(a, D, cfg), mesh)
+            us = time_call(solver.solve_blocks, b)
+            emit(f"fig10/{entry.name}/{D}dev", us, f"speedup_vs_1dev={base_us/us:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Paper Fig. 7: SpTRSV design scenarios on 4 devices.
+
+Scenarios (exact analogues of the paper's four bars, DESIGN.md §5.2):
+  unified            4GPU-Unified        dense all-reduce/superstep, contiguous
+  unified+task       4GPU-Unified+8task  dense exchange + task-pool partition
+  shmem              4GPU-Shmem          packed boundary exchange, contiguous
+  zerocopy           4GPU-Zerocopy       packed exchange + task-pool (8 tasks)
+
+Derived column: speedup over `unified` (the paper's normalization).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_scale, emit, time_call
+from repro.core import DistributedSolver, SolverConfig, build_plan
+from repro.core.blocking import pad_rhs
+from repro.sparse.suite import table1_suite
+
+SCENARIOS = {
+    "unified": SolverConfig(block_size=16, comm="unified", partition="contiguous"),
+    "unified+task": SolverConfig(block_size=16, comm="unified", partition="taskpool",
+                                 tasks_per_device=8),
+    "shmem": SolverConfig(block_size=16, comm="zerocopy", partition="contiguous"),
+    "zerocopy": SolverConfig(block_size=16, comm="zerocopy", partition="taskpool",
+                             tasks_per_device=8),
+}
+
+
+def main() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    D = 4
+    assert len(jax.devices()) >= D, "run via benchmarks.run (forces device count)"
+    mesh = jax.make_mesh((D,), ("x",), devices=jax.devices()[:D],
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    for entry in table1_suite(bench_scale()):
+        a = entry.build()
+        rng = np.random.default_rng(0)
+        b = jnp.asarray(pad_rhs(rng.uniform(-1, 1, a.n), build_plan(
+            a, 1, SolverConfig(block_size=16)).bs))
+        base_us = None
+        for name, cfg in SCENARIOS.items():
+            plan = build_plan(a, D, cfg)
+            solver = DistributedSolver(plan, mesh)
+            us = time_call(solver.solve_blocks, b)
+            if name == "unified":
+                base_us = us
+            emit(f"fig7/{entry.name}/{name}", us, f"speedup={base_us / us:.2f}")
+
+
+if __name__ == "__main__":
+    main()

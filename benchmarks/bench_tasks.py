@@ -1,0 +1,43 @@
+"""Paper Fig. 9: sensitivity to tasks-per-device (zerocopy, 4 devices).
+
+Derived column: performance normalized to the 4-tasks/device case (paper's
+normalization), i.e. ``t_4task / t_this``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_scale, emit, time_call
+from repro.core import DistributedSolver, SolverConfig, build_plan
+from repro.core.blocking import pad_rhs
+from repro.sparse.suite import table1_suite
+
+TASKS = [1, 2, 4, 8, 16, 32]
+
+
+def main() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    D = 4
+    mesh = jax.make_mesh((D,), ("x",), devices=jax.devices()[:D],
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    suite = [e for e in table1_suite(bench_scale())
+             if e.name in ("webbase-1M", "dc2", "pkustk14", "nlpkkt160", "delaunay_n20")]
+    for entry in suite:
+        a = entry.build()
+        b = jnp.asarray(pad_rhs(np.random.default_rng(0).uniform(-1, 1, a.n),
+                                build_plan(a, 1, SolverConfig(block_size=16)).bs))
+        results = {}
+        for t in TASKS:
+            cfg = SolverConfig(block_size=16, comm="zerocopy", partition="taskpool",
+                               tasks_per_device=t)
+            solver = DistributedSolver(build_plan(a, D, cfg), mesh)
+            results[t] = time_call(solver.solve_blocks, b)
+        for t in TASKS:
+            emit(f"fig9/{entry.name}/tasks{t}", results[t],
+                 f"norm_vs_4task={results[4] / results[t]:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""§Roofline: derive the three roofline terms from dry-run artifacts.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI. ``cost_analysis()`` on the partitioned executable is per-device;
+collective bytes come from the HLO parse in repro.launch.dryrun.
+
+Also reports MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (inference)
+and the usefulness ratio MODEL_FLOPS / (HLO_FLOPs × n_devices) — remat and
+dispatch overheads show up here.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+LINK_BW = 50e9  # B/s per ICI link
+
+# XLA CPU's cost model counts multiply and add separately: a (N,K)x(K,M) dot
+# reports 2·N·M·K — the same convention as 6ND. Calibrated by lowering a pure
+# 1024³ matmul (tests/test_roofline.py). No correction needed.
+FMA_FACTOR = 1.0
+
+
+def load_cells(out_dir: str = "experiments/dryrun") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def wire_bytes(coll: dict, ring: int = 16) -> float:
+    """Payload -> ring wire bytes: all-reduce moves 2(n-1)/n of its payload,
+    all-gather/reduce-scatter/all-to-all (n-1)/n (n = ring size, model axis)."""
+    f_ar = 2.0 * (ring - 1) / ring
+    f_other = (ring - 1) / ring
+    total = 0.0
+    for k, v in coll.items():
+        if k == "total":
+            continue
+        total += v * (f_ar if k == "all-reduce" else f_other)
+    return total
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    n = rec["n_devices"]
+    flops_dev = rec["flops_per_device"] * FMA_FACTOR
+    bytes_dev = rec["bytes_per_device"]
+    coll_dev = wire_bytes(rec["collectives"]["bytes"])
+    t_c = flops_dev / PEAK_FLOPS
+    t_m = bytes_dev / HBM_BW
+    t_x = coll_dev / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x), key=lambda kv: kv[1])
+    useful = rec["model_flops"] / max(1.0, flops_dev * n)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "bottleneck": dom[0],
+        "bound_s": dom[1],
+        "model_flops": rec["model_flops"],
+        "useful_flops_ratio": useful,
+        "roofline_fraction": t_c / max(t_c, t_m, t_x),
+        "temp_gb": rec.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9,
+    }
+
+
+def main() -> None:
+    rows = [r for r in (roofline_row(c) for c in load_cells()) if r]
+    rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    print("name,us_per_call,derived")
+    for r in rows:
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        derived = (
+            f"bottleneck={r['bottleneck']};frac={r['roofline_fraction']:.2f};"
+            f"cmp={r['compute_s']*1e3:.1f}ms;mem={r['memory_s']*1e3:.1f}ms;"
+            f"coll={r['collective_s']*1e3:.1f}ms;useful={r['useful_flops_ratio']:.2f}"
+        )
+        print(f"{name},{r['bound_s']*1e6:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Benchmark driver: one section per paper table/figure. CSV: name,us_per_call,derived.
+
+  fig3   communication volume, unified vs zerocopy (paper Fig. 3 analogue)
+  fig7   design-scenario speedups on 4 devices      (paper Fig. 7)
+  fig8   interconnect sensitivity model             (paper Fig. 8)
+  fig9   tasks-per-device sensitivity               (paper Fig. 9)
+  fig10  strong scaling 1..8 devices                (paper Fig. 10)
+  lm     LM substrate step times (reduced configs)
+  roofline  §Roofline terms from dry-run artifacts (if present)
+
+Multi-device sections run in subprocesses with forced host device counts.
+``REPRO_BENCH_SCALE`` scales the Table-I suite (default 0.1);
+``REPRO_BENCH_FAST=1`` runs a reduced set for CI-style smoke runs.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import run_with_devices  # noqa: E402
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    fast = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+    scale = os.environ.get("REPRO_BENCH_SCALE", "0.05" if fast else "0.1")
+    env = {"REPRO_BENCH_SCALE": scale}
+
+    # plan-level analysis (no devices)
+    from benchmarks import bench_comm_volume, bench_interconnect_model
+
+    bench_comm_volume.main()
+    bench_interconnect_model.main()
+
+    # multi-device sections (subprocess with forced device count)
+    print(run_with_devices("benchmarks.bench_scenarios", 4, env), end="")
+    if not fast:
+        print(run_with_devices("benchmarks.bench_tasks", 4, env), end="")
+        print(run_with_devices("benchmarks.bench_scaling", 8, env), end="")
+        print(run_with_devices("benchmarks.bench_lm_step", 1, env), end="")
+
+    # roofline table from dry-run artifacts, if the sweep has run
+    if os.path.isdir("experiments/dryrun"):
+        from benchmarks import roofline
+
+        rows = [r for r in map(roofline.roofline_row, roofline.load_cells()) if r]
+        for r in rows:
+            name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+            derived = (
+                f"bottleneck={r['bottleneck']};frac={r['roofline_fraction']:.2f};"
+                f"useful={r['useful_flops_ratio']:.2f}"
+            )
+            print(f"{name},{r['bound_s']*1e6:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""SpTRSV as the triangular-solve step of a preconditioned iterative method.
+
+The paper motivates SpTRSV as the kernel inside preconditioners (§I). Here a
+perturbed system ``A = L + E`` is solved by preconditioned Richardson
+iteration with ``M = L``: each sweep applies one distributed zero-copy
+triangular solve (the plan/compile is reused across all iterations — the
+"solver invoked 100x" pattern the paper benchmarks).
+
+Run:  PYTHONPATH=src python examples/preconditioner.py
+"""
+import jax
+import numpy as np
+
+from repro.core import DistributedSolver, SolverConfig, build_plan
+from repro.sparse import suite
+from repro.sparse.matrix import to_scipy
+
+a = suite.grid2d_factor(40, seed=0)  # structured-grid factor, n=1600
+L = to_scipy(a).tocsr()
+rng = np.random.default_rng(0)
+E = L.copy()
+E.data = E.data * rng.uniform(-0.01, 0.01, E.nnz)  # 1% perturbation of L
+A = (L + E).tocsr()
+
+b = rng.uniform(-1, 1, a.n)
+D = len(jax.devices())
+mesh = jax.make_mesh((D,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+plan = build_plan(a, D, SolverConfig(block_size=32, comm="zerocopy",
+                                     partition="taskpool"))
+solver = DistributedSolver(plan, mesh)  # compile once, reuse per sweep
+
+x = np.zeros(a.n)
+for it in range(30):
+    r = b - A @ x
+    res = np.linalg.norm(r) / np.linalg.norm(b)
+    if it % 5 == 0:
+        print(f"iter {it:2d}  relative residual {res:.3e}")
+    if res < 1e-10:
+        break
+    x = x + solver.solve(r)
+print(f"converged: ||Ax-b||/||b|| = {np.linalg.norm(A@x-b)/np.linalg.norm(b):.3e}")

@@ -1,0 +1,40 @@
+"""Quickstart: distributed zero-copy SpTRSV in 30 lines.
+
+Builds a Table-I-like sparse lower-triangular system, analyses it, and solves
+it under the paper's four design scenarios, verifying against scipy.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+(multi-device: XLA_FLAGS=--xla_force_host_platform_device_count=4)
+"""
+import jax
+import numpy as np
+
+from repro.core import SolverConfig, build_plan, cut_stats, metrics, sptrsv
+from repro.core.analysis import level_sets
+from repro.sparse import suite
+from repro.sparse.matrix import reference_solve
+
+a = suite.random_levelled(n=2000, levels=64, avg_deps=4.0, seed=0)
+m = metrics(a, level_sets(a))
+print(f"matrix: n={m.n} nnz={m.nnz} levels={m.n_levels} "
+      f"dependency={m.dependency:.2f} parallelism={m.parallelism:.0f}")
+
+b = np.random.default_rng(0).uniform(-1, 1, a.n)
+x_ref = reference_solve(a, b)
+
+D = len(jax.devices())
+mesh = jax.make_mesh((D,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+print(f"devices: {D}")
+
+for name, cfg in {
+    "unified (UM analogue)": SolverConfig(comm="unified", partition="contiguous"),
+    "shmem (zerocopy, contiguous)": SolverConfig(comm="zerocopy", partition="contiguous"),
+    "zerocopy + task pool": SolverConfig(comm="zerocopy", partition="taskpool"),
+    "sync-free runtime frontier": SolverConfig(comm="zerocopy", sched="syncfree"),
+}.items():
+    x = sptrsv(a, b, mesh=mesh, config=cfg)
+    err = np.abs(x - x_ref).max() / np.abs(x_ref).max()
+    plan = build_plan(a, D, cfg)
+    cs = cut_stats(plan.bs, plan.part)
+    print(f"{name:32s} rel.err={err:.2e}  comm/solve={plan.comm_bytes_per_solve/1e3:.0f}KB"
+          f"  level-imbalance={cs.level_imbalance:.2f}")

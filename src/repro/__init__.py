@@ -1,0 +1,3 @@
+"""repro: multi-pod JAX framework reproducing zero-copy SpTRSV (Xie et al., 2020)."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,13 @@
+"""The paper's primary contribution: distributed zero-copy SpTRSV."""
+from repro.core.analysis import in_degrees, level_sets, metrics
+from repro.core.blocking import BlockStructure, build_blocks, pad_rhs, unpad_x
+from repro.core.partition import Partition, cut_stats, make_partition
+from repro.core.solver import (
+    AXIS,
+    DistributedSolver,
+    Plan,
+    SolverConfig,
+    build_plan,
+    solve_local,
+    sptrsv,
+)

@@ -1,0 +1,95 @@
+"""B×B dense-block tiling of a sparse lower-triangular matrix.
+
+TPU adaptation of the paper's scalar component model (DESIGN.md §2): scalar
+dependency chains are hostile to the VPU/MXU, so we lift the dependency graph
+to the *block quotient graph*. Block-row ``bi`` owns components
+``[bi*B, (bi+1)*B)``; the diagonal tile is solved by a dense block-TRSV kernel
+and each off-diagonal tile ``(bi, bj)`` contributes an MXU GEMV update.
+All paper concepts (in-degree, level-sets, task partitioning, boundary
+exchange) then operate on block-rows instead of components.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.sparse.matrix import CSR
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockStructure:
+    """Dense-tile block-sparse view of lower-triangular L (padded to nb*B)."""
+
+    n: int  # original dimension
+    B: int  # tile size
+    nb: int  # number of block rows = ceil(n/B)
+    diag: np.ndarray  # (nb, B, B) dense diagonal tiles (unit-padded)
+    off_rows: np.ndarray  # (m,) block-row id of each strictly-lower tile
+    off_cols: np.ndarray  # (m,) block-col id of each strictly-lower tile
+    off_tiles: np.ndarray  # (m, B, B) dense tile values
+    block_level: np.ndarray  # (nb,) level of each block row in the quotient DAG
+    block_indeg: np.ndarray  # (nb,) #distinct predecessor tiles per block row
+
+    @property
+    def n_tiles(self) -> int:
+        return int(self.off_rows.shape[0])
+
+    @property
+    def n_block_levels(self) -> int:
+        return int(self.block_level.max()) + 1 if self.nb else 0
+
+
+def build_blocks(a: CSR, B: int) -> BlockStructure:
+    nb = -(-a.n // B)
+    n_pad = nb * B
+    rows = np.repeat(np.arange(a.n, dtype=np.int64), np.diff(a.row_ptr))
+    cols = a.col_idx.astype(np.int64)
+    vals = a.val
+    brow, bcol = rows // B, cols // B
+
+    # --- diagonal tiles ---
+    diag = np.zeros((nb, B, B), dtype=np.float32)
+    eye_idx = np.arange(B)
+    diag[:, eye_idx, eye_idx] = 1.0  # padding rows become identity (inert)
+    dmask = brow == bcol
+    diag[brow[dmask], rows[dmask] % B, cols[dmask] % B] = vals[dmask]
+
+    # --- strictly-lower tiles (dense) ---
+    omask = ~dmask
+    o_brow, o_bcol = brow[omask], bcol[omask]
+    key = o_brow * nb + o_bcol
+    uniq, inv = np.unique(key, return_inverse=True)
+    m = uniq.shape[0]
+    off_tiles = np.zeros((m, B, B), dtype=np.float32)
+    off_tiles[inv, rows[omask] % B, cols[omask] % B] = vals[omask]
+    off_rows = (uniq // nb).astype(np.int32)
+    off_cols = (uniq % nb).astype(np.int32)
+
+    # --- quotient-graph analysis (block in-degree & level-sets) ---
+    indeg = np.bincount(off_rows, minlength=nb).astype(np.int32)
+    lvl = np.zeros(nb, dtype=np.int32)
+    order = np.argsort(off_rows, kind="stable")
+    sr, sc = off_rows[order], off_cols[order]
+    ptr = np.zeros(nb + 1, dtype=np.int64)
+    np.cumsum(np.bincount(sr, minlength=nb), out=ptr[1:])
+    for bi in range(nb):
+        lo, hi = ptr[bi], ptr[bi + 1]
+        if hi > lo:
+            lvl[bi] = lvl[sc[lo:hi]].max() + 1
+    del n_pad
+    return BlockStructure(
+        n=a.n, B=B, nb=nb, diag=diag, off_rows=off_rows, off_cols=off_cols,
+        off_tiles=off_tiles, block_level=lvl, block_indeg=indeg,
+    )
+
+
+def pad_rhs(b: np.ndarray, bs: BlockStructure) -> np.ndarray:
+    """(n,) -> (nb, B) block layout, zero padded."""
+    out = np.zeros(bs.nb * bs.B, dtype=np.float32)
+    out[: bs.n] = b
+    return out.reshape(bs.nb, bs.B)
+
+
+def unpad_x(xb: np.ndarray, bs: BlockStructure) -> np.ndarray:
+    return np.asarray(xb).reshape(-1)[: bs.n]

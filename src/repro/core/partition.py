@@ -1,0 +1,95 @@
+"""Workload partitioning across devices — the paper's task-pool model (§V).
+
+Two strategies over *block rows* (the schedulable unit, DESIGN.md §2):
+
+* ``contiguous`` — the paper's baseline: block-rows split into D consecutive
+  ranges. Dependencies become unidirectional (device d always waits on
+  devices < d), the imbalance the paper identifies.
+* ``taskpool``   — the paper's contribution: block-rows grouped into *tasks* of
+  ``task_size`` consecutive block-rows, dealt **round-robin** to devices.
+  ``tasks_per_device`` is the paper's tunable (Fig. 9 sensitivity).
+
+Also computes the *cut statistics* that drive the zero-copy exchange: a block
+row is a **boundary row** iff some tile in that row lives in a column owned by
+a different device — only those rows are communicated (DESIGN.md §5.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.blocking import BlockStructure
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    n_devices: int
+    strategy: str  # "contiguous" | "taskpool"
+    tasks_per_device: int
+    owner: np.ndarray  # (nb,) device owning each block row (and block column)
+    boundary: np.ndarray  # (nb,) bool: row receives updates from a remote device
+
+    def local_rows(self, d: int) -> np.ndarray:
+        return np.nonzero(self.owner == d)[0].astype(np.int32)
+
+
+def make_partition(
+    bs: BlockStructure,
+    n_devices: int,
+    strategy: str = "taskpool",
+    tasks_per_device: int = 8,
+) -> Partition:
+    nb = bs.nb
+    if strategy == "contiguous":
+        per = -(-nb // n_devices)
+        owner = np.minimum(np.arange(nb) // per, n_devices - 1).astype(np.int32)
+        tasks_per_device = 1
+    elif strategy == "taskpool":
+        n_tasks = n_devices * tasks_per_device
+        task_size = max(1, -(-nb // n_tasks))
+        task_of = np.arange(nb) // task_size
+        owner = (task_of % n_devices).astype(np.int32)  # round-robin deal (paper §V)
+    else:
+        raise ValueError(f"unknown partition strategy: {strategy}")
+
+    boundary = np.zeros(nb, dtype=bool)
+    remote = owner[bs.off_cols] != owner[bs.off_rows]
+    boundary[bs.off_rows[remote]] = True
+    return Partition(
+        n_devices=n_devices, strategy=strategy, tasks_per_device=tasks_per_device,
+        owner=owner, boundary=boundary,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class CutStats:
+    """Communication / balance statistics (feeds bench_comm_volume, Fig-3 analogue)."""
+
+    boundary_rows: int
+    boundary_fraction: float
+    remote_tiles: int
+    remote_tile_fraction: float
+    level_imbalance: float  # mean over levels of max_dev_rows / mean_dev_rows
+
+
+def cut_stats(bs: BlockStructure, part: Partition) -> CutStats:
+    remote = part.owner[bs.off_cols] != part.owner[bs.off_rows]
+    n_levels = bs.n_block_levels
+    # per-level, per-device row counts
+    imb = []
+    for t in range(n_levels):
+        rows_t = np.nonzero(bs.block_level == t)[0]
+        if rows_t.size == 0:
+            continue
+        counts = np.bincount(part.owner[rows_t], minlength=part.n_devices)
+        mean = counts.mean()
+        if mean > 0:
+            imb.append(counts.max() / mean)
+    return CutStats(
+        boundary_rows=int(part.boundary.sum()),
+        boundary_fraction=float(part.boundary.mean()),
+        remote_tiles=int(remote.sum()),
+        remote_tile_fraction=float(remote.mean()) if remote.size else 0.0,
+        level_imbalance=float(np.mean(imb)) if imb else 1.0,
+    )

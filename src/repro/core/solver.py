@@ -1,0 +1,430 @@
+"""Distributed SpTRSV — the paper's contribution, TPU-native (DESIGN.md §5).
+
+Execution model
+---------------
+Block-rows are distributed by a :class:`~repro.core.partition.Partition`
+(each device owns block-row *and* block-column ``r`` — the paper's layout
+where components x, columns of L and rhs b are co-partitioned). Tiles live on
+the owner of their *column*, so an update ``acc[r] += L[r,c] @ x[c]`` is always
+computed where ``x[c]`` was produced: the **only** communication is combining
+per-device partial accumulators — the paper's read-only model, where each PE
+accumulates into its own symmetric-heap array and the owner of a row pulls and
+reduces partials right before solving.
+
+Communication modes (paper Fig. 7 scenarios):
+* ``unified``  — all-reduce the *full* n-sized accumulator delta every
+  superstep (the Unified-Memory analogue: dense, cut-oblivious traffic).
+* ``zerocopy`` — exchange only *packed boundary rows*; in ``levelset``
+  scheduling each row is exchanged exactly once, lazily, right before its
+  level (the NVSHMEM get+warp-reduce analogue: psum of the packed buffer).
+
+Scheduling modes:
+* ``levelset`` — host-precomputed block wavefronts (Naumov-style baseline).
+* ``syncfree`` — no level analysis; runtime in-degree counters discover the
+  frontier each superstep (the paper's synchronization-free algorithm,
+  bulk-synchronous TPU adaptation).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.blocking import BlockStructure, build_blocks
+from repro.core.partition import Partition, make_partition
+from repro.kernels import ops
+from repro.sparse.matrix import CSR
+
+AXIS = "x"  # device axis name used by the solver
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    block_size: int = 32
+    comm: str = "zerocopy"  # "zerocopy" | "unified"
+    sched: str = "levelset"  # "levelset" | "syncfree"
+    partition: str = "taskpool"  # "taskpool" | "contiguous"
+    tasks_per_device: int = 8
+    kernel_backend: str | None = None  # None -> ops default ("reference" on CPU)
+    gemv_group: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Host-built execution plan: everything static for a (matrix, partition)."""
+
+    bs: BlockStructure
+    part: Partition
+    config: SolverConfig
+    n_devices: int
+    n_levels: int
+    # replicated
+    diag: np.ndarray  # (nb+1, B, B) identity at pad slot
+    owner: np.ndarray  # (nb+1,) int32, -1 at pad
+    indeg: np.ndarray  # (nb+1,) int32 tile in-degree per block row
+    ex_levels: np.ndarray  # (T, ME) rows exchanged before level t (levelset/zerocopy)
+    ex_boundary: np.ndarray  # (MEB,) static boundary row list (syncfree/zerocopy)
+    # sharded by leading device axis
+    solve_rows: np.ndarray  # (D, T, MS) owned rows per level, pad -1 (levelset)
+    upd_tiles: np.ndarray  # (D, T, MU) local tile ids per level, pad ML (levelset)
+    local_rows: np.ndarray  # (D, MLR) owned rows, pad nb (syncfree)
+    tile_row: np.ndarray  # (D, ML+1) dest block-row per local tile, pad nb
+    tile_col: np.ndarray  # (D, ML+1) src block-col per local tile, pad nb
+    tiles: np.ndarray  # (D, ML+1, B, B) zero tile at pad slot
+
+    @property
+    def comm_bytes_per_solve(self) -> int:
+        """Predicted collective payload bytes for one solve (one device's share)."""
+        B = self.bs.B
+        itemsize = 4
+        if self.config.comm == "unified":
+            per_step = (self.bs.nb + 1) * B * itemsize
+            steps = self.n_levels if self.config.sched == "levelset" else self.n_levels
+            return per_step * steps
+        if self.config.sched == "levelset":
+            return int(self.ex_levels.size) * B * itemsize
+        return int(self.ex_boundary.size) * (B + 1) * itemsize * self.n_levels
+
+
+def build_plan(a: CSR, n_devices: int, config: SolverConfig = SolverConfig()) -> Plan:
+    bs = build_blocks(a, config.block_size)
+    part = make_partition(bs, n_devices, config.partition, config.tasks_per_device)
+    nb, B, D = bs.nb, bs.B, n_devices
+    T = bs.n_block_levels
+
+    diag = np.concatenate([bs.diag, np.eye(B, dtype=np.float32)[None]], axis=0)
+    owner = np.concatenate([part.owner, [-1]]).astype(np.int32)
+    indeg = np.concatenate([bs.block_indeg, [0]]).astype(np.int32)
+
+    # --- per-device tile stores (tiles live on their column's owner) ---
+    tile_dev = part.owner[bs.off_cols]
+    per_dev_tiles = [np.nonzero(tile_dev == d)[0] for d in range(D)]
+    ML = max((t.shape[0] for t in per_dev_tiles), default=0)
+    tiles = np.zeros((D, ML + 1, B, B), dtype=np.float32)
+    tile_row = np.full((D, ML + 1), nb, dtype=np.int32)
+    tile_col = np.full((D, ML + 1), nb, dtype=np.int32)
+    local_tile_id = np.full(bs.n_tiles, -1, dtype=np.int64)  # global tile -> local slot
+    for d, ids in enumerate(per_dev_tiles):
+        k = ids.shape[0]
+        tiles[d, :k] = bs.off_tiles[ids]
+        tile_row[d, :k] = bs.off_rows[ids]
+        tile_col[d, :k] = bs.off_cols[ids]
+        local_tile_id[ids] = np.arange(k)
+
+    # --- levelset plan ---
+    lvl = bs.block_level
+    rows_by = [[np.nonzero((part.owner == d) & (lvl == t))[0] for t in range(T)] for d in range(D)]
+    MS = max((r.shape[0] for dev in rows_by for r in dev), default=1) or 1
+    solve_rows = np.full((D, T, MS), -1, dtype=np.int32)
+    for d in range(D):
+        for t in range(T):
+            r = rows_by[d][t]
+            solve_rows[d, t, : r.shape[0]] = r
+
+    col_lvl = lvl[bs.off_cols]
+    tiles_by = [
+        [np.nonzero((tile_dev == d) & (col_lvl == t))[0] for t in range(T)] for d in range(D)
+    ]
+    MU = max((t.shape[0] for dev in tiles_by for t in dev), default=1) or 1
+    upd_tiles = np.full((D, T, MU), ML, dtype=np.int32)
+    for d in range(D):
+        for t in range(T):
+            ids = tiles_by[d][t]
+            upd_tiles[d, t, : ids.shape[0]] = local_tile_id[ids]
+
+    # --- exchange lists ---
+    b_rows = np.nonzero(part.boundary)[0]
+    ex_by_level = [b_rows[lvl[b_rows] == t] for t in range(T)]
+    ME = max((e.shape[0] for e in ex_by_level), default=1) or 1
+    ex_levels = np.full((T, ME), nb, dtype=np.int32)
+    for t in range(T):
+        e = ex_by_level[t]
+        ex_levels[t, : e.shape[0]] = e
+    ex_boundary = b_rows.astype(np.int32) if b_rows.size else np.full((1,), nb, dtype=np.int32)
+
+    # --- syncfree plan ---
+    per_dev_rows = [np.nonzero(part.owner == d)[0] for d in range(D)]
+    MLR = max((r.shape[0] for r in per_dev_rows), default=1) or 1
+    local_rows = np.full((D, MLR), nb, dtype=np.int32)
+    for d, r in enumerate(per_dev_rows):
+        local_rows[d, : r.shape[0]] = r
+
+    return Plan(
+        bs=bs, part=part, config=config, n_devices=D, n_levels=T,
+        diag=diag, owner=owner, indeg=indeg, ex_levels=ex_levels,
+        ex_boundary=ex_boundary, solve_rows=solve_rows, upd_tiles=upd_tiles,
+        local_rows=local_rows, tile_row=tile_row, tile_col=tile_col, tiles=tiles,
+    )
+
+
+# ---------------------------------------------------------------------------
+# single-device levelset executor (the "1-GPU" baseline and structural oracle)
+# ---------------------------------------------------------------------------
+
+
+def solve_local(plan: Plan, b_blocks: jax.Array) -> jax.Array:
+    """Level-scheduled solve on one device. b_blocks: (nb, B) -> x (nb, B)."""
+    cfg = plan.config
+    nb, B = plan.bs.nb, plan.bs.B
+    diag = jnp.asarray(plan.diag)
+    sr = jnp.asarray(plan.solve_rows.reshape(-1, plan.solve_rows.shape[-1]))  # D=1
+    ut = jnp.asarray(plan.upd_tiles.reshape(-1, plan.upd_tiles.shape[-1]))
+    trow = jnp.asarray(plan.tile_row[0])
+    tcol = jnp.asarray(plan.tile_col[0])
+    tiles = jnp.asarray(plan.tiles[0])
+    b_pad = jnp.concatenate([b_blocks, jnp.zeros((1, B), b_blocks.dtype)])
+
+    def body(t, carry):
+        acc, x = carry
+        rows = jax.lax.dynamic_index_in_dim(sr, t, 0, keepdims=False)
+        safe = jnp.where(rows < 0, nb, rows)
+        xs = ops.batched_block_trsv(
+            diag[safe], b_pad[safe] - acc[safe], backend=cfg.kernel_backend
+        )
+        x = x.at[safe].set(jnp.where((rows >= 0)[:, None], xs, x[safe]))
+        tids = jax.lax.dynamic_index_in_dim(ut, t, 0, keepdims=False)
+        prods = ops.batched_block_gemv(
+            tiles[tids], x[tcol[tids]], backend=cfg.kernel_backend, group=cfg.gemv_group
+        )
+        acc = acc.at[trow[tids]].add(prods)
+        return acc, x
+
+    acc0 = jnp.zeros((nb + 1, B), b_blocks.dtype)
+    _, x = jax.lax.fori_loop(0, plan.n_levels, body, (acc0, acc0))
+    return x[:nb]
+
+
+# ---------------------------------------------------------------------------
+# distributed executors (shard_map over AXIS)
+# ---------------------------------------------------------------------------
+
+
+def _levelset_device_fn(plan: Plan):
+    cfg = plan.config
+    nb, B, T = plan.bs.nb, plan.bs.B, plan.n_levels
+    zerocopy = cfg.comm == "zerocopy"
+    has_ex = plan.ex_levels.shape[1] > 0 and plan.n_devices > 1
+
+    def fn(sr, ut, trow, tcol, tiles, owner_mask, diag, ex, b_pad):
+        # leading device dim of sharded operands is 1 inside shard_map
+        sr, ut = sr[0], ut[0]
+        trow, tcol, tiles, owner_mask = trow[0], tcol[0], tiles[0], owner_mask[0]
+
+        def body(t, carry):
+            acc, x = carry
+            if zerocopy and has_ex:
+                # lazy exactly-once pull: combine partial accumulators for the
+                # boundary rows of THIS level right before solving them
+                rows = jax.lax.dynamic_index_in_dim(ex, t, 0, keepdims=False)
+                red = jax.lax.psum(acc[rows], AXIS)
+                acc = acc.at[rows].set(red)
+            rows = jax.lax.dynamic_index_in_dim(sr, t, 0, keepdims=False)
+            safe = jnp.where(rows < 0, nb, rows)
+            xs = ops.batched_block_trsv(
+                diag[safe], b_pad[safe] - acc[safe], backend=cfg.kernel_backend
+            )
+            x = x.at[safe].set(jnp.where((rows >= 0)[:, None], xs, x[safe]))
+            tids = jax.lax.dynamic_index_in_dim(ut, t, 0, keepdims=False)
+            prods = ops.batched_block_gemv(
+                tiles[tids], x[tcol[tids]], backend=cfg.kernel_backend, group=cfg.gemv_group
+            )
+            acc = acc.at[trow[tids]].add(prods)
+            return acc, x
+
+        acc0 = jnp.zeros((nb + 1, B), b_pad.dtype)
+        _, x = jax.lax.fori_loop(0, T, body, (acc0, acc0))
+        xg = x * owner_mask[:, None]
+        if plan.n_devices > 1:
+            xg = jax.lax.psum(xg, AXIS)
+        return xg[:nb]
+
+    return fn
+
+
+def _levelset_unified_device_fn(plan: Plan):
+    """Unified-memory analogue: delta accumulators + full-array psum per level."""
+    cfg = plan.config
+    nb, B, T = plan.bs.nb, plan.bs.B, plan.n_levels
+
+    def fn(sr, ut, trow, tcol, tiles, owner_mask, diag, ex, b_pad):
+        del ex
+        sr, ut = sr[0], ut[0]
+        trow, tcol, tiles, owner_mask = trow[0], tcol[0], tiles[0], owner_mask[0]
+
+        def body(t, carry):
+            acc_red, delta, x = carry
+            # dense exchange of everything accumulated since the last level —
+            # the page-bouncing s.left_sum traffic of Alg. 2.
+            acc_red = acc_red + jax.lax.psum(delta, AXIS)
+            delta = jnp.zeros_like(delta)
+            rows = jax.lax.dynamic_index_in_dim(sr, t, 0, keepdims=False)
+            safe = jnp.where(rows < 0, nb, rows)
+            xs = ops.batched_block_trsv(
+                diag[safe], b_pad[safe] - acc_red[safe], backend=cfg.kernel_backend
+            )
+            x = x.at[safe].set(jnp.where((rows >= 0)[:, None], xs, x[safe]))
+            tids = jax.lax.dynamic_index_in_dim(ut, t, 0, keepdims=False)
+            prods = ops.batched_block_gemv(
+                tiles[tids], x[tcol[tids]], backend=cfg.kernel_backend, group=cfg.gemv_group
+            )
+            delta = delta.at[trow[tids]].add(prods)
+            return acc_red, delta, x
+
+        z = jnp.zeros((nb + 1, B), b_pad.dtype)
+        _, _, x = jax.lax.fori_loop(0, T, body, (z, z, z))
+        return jax.lax.psum(x * owner_mask[:, None], AXIS)[:nb]
+
+    return fn
+
+
+def _syncfree_device_fn(plan: Plan):
+    """Runtime-frontier solver: no level analysis, in-degree counters drive it."""
+    cfg = plan.config
+    nb, B = plan.bs.nb, plan.bs.B
+    zerocopy = cfg.comm == "zerocopy"
+    multi = plan.n_devices > 1
+
+    def fn(lr, trow, tcol, tiles, owner_mask, diag, indeg, exb, b_pad):
+        lr = lr[0]
+        trow, tcol, tiles, owner_mask = trow[0], tcol[0], tiles[0], owner_mask[0]
+        me = jax.lax.axis_index(AXIS) if multi else 0
+        ldiag = diag[lr]
+        lb = b_pad[lr]
+        lown = owner_mask[lr] > 0  # valid (non-pad) local rows
+        dest_mine = owner_mask[trow] > 0  # tile dest owned by this device
+
+        def cond(state):
+            return jnp.logical_not(state["done"])
+
+        def body(state):
+            acc_red, delta, cnt_red, dcnt, solved, x = (
+                state["acc_red"], state["delta"], state["cnt_red"],
+                state["dcnt"], state["solved"], state["x"],
+            )
+            # 1. frontier: owned, unsolved, all dependencies counted in
+            ready = jnp.logical_and(
+                jnp.logical_and(lown, jnp.logical_not(solved[lr])),
+                cnt_red[lr] == indeg[lr],
+            )
+            # 2. solve the frontier (masked dense over local rows)
+            xs = ops.batched_block_trsv(
+                ldiag, lb - acc_red[lr], backend=cfg.kernel_backend
+            )
+            x = x.at[lr].set(jnp.where(ready[:, None], xs, x[lr]))
+            solved = solved.at[lr].set(jnp.logical_or(solved[lr], ready))
+            # 3. updates from tiles whose source column solved THIS superstep
+            just = jnp.zeros((nb + 1,), jnp.bool_).at[lr].set(ready)
+            tmask = just[tcol]
+            prods = ops.batched_block_gemv(
+                tiles, x[tcol], backend=cfg.kernel_backend, group=cfg.gemv_group
+            )
+            pm = jnp.where(tmask[:, None], prods, 0.0)
+            cm = tmask.astype(jnp.int32)
+            if multi:
+                acc_red = acc_red.at[trow].add(jnp.where(dest_mine[:, None], pm, 0.0))
+                cnt_red = cnt_red.at[trow].add(jnp.where(dest_mine, cm, 0))
+                delta = delta.at[trow].add(jnp.where(dest_mine[:, None], 0.0, pm))
+                dcnt = dcnt.at[trow].add(jnp.where(dest_mine, 0, cm))
+                # 4. exchange remote contributions
+                if zerocopy:
+                    red = jax.lax.psum(delta[exb], AXIS)
+                    redc = jax.lax.psum(dcnt[exb], AXIS)
+                    acc_red = acc_red.at[exb].add(red)
+                    cnt_red = cnt_red.at[exb].add(redc)
+                    delta = delta.at[exb].set(0.0)
+                    dcnt = dcnt.at[exb].set(0)
+                else:
+                    acc_red = acc_red + jax.lax.psum(delta, AXIS)
+                    cnt_red = cnt_red + jax.lax.psum(dcnt, AXIS)
+                    delta = jnp.zeros_like(delta)
+                    dcnt = jnp.zeros_like(dcnt)
+            else:
+                acc_red = acc_red.at[trow].add(pm)
+                cnt_red = cnt_red.at[trow].add(cm)
+            # 5. global termination check
+            remaining = jnp.sum(jnp.logical_and(lown, jnp.logical_not(solved[lr])))
+            if multi:
+                remaining = jax.lax.psum(remaining, AXIS)
+            return dict(
+                acc_red=acc_red, delta=delta, cnt_red=cnt_red, dcnt=dcnt,
+                solved=solved, x=x, done=remaining == 0,
+            )
+
+        zf = jnp.zeros((nb + 1, B), b_pad.dtype)
+        zi = jnp.zeros((nb + 1,), jnp.int32)
+        state = dict(
+            acc_red=zf, delta=zf, cnt_red=zi, dcnt=zi,
+            solved=jnp.zeros((nb + 1,), jnp.bool_), x=zf,
+            done=jnp.asarray(False),
+        )
+        state = jax.lax.while_loop(cond, body, state)
+        xg = state["x"] * owner_mask[:, None]
+        if multi:
+            xg = jax.lax.psum(xg, AXIS)
+        return xg[:nb]
+
+    return fn
+
+
+class DistributedSolver:
+    """Compiled multi-device SpTRSV for one (matrix, partition, mesh)."""
+
+    def __init__(self, plan: Plan, mesh: jax.sharding.Mesh):
+        assert mesh.devices.size == plan.n_devices, (mesh.devices.size, plan.n_devices)
+        self.plan = plan
+        self.mesh = mesh
+        nb = plan.bs.nb
+        D = plan.n_devices
+        owner_mask = np.zeros((D, nb + 1), np.float32)
+        for d in range(D):
+            owner_mask[d, :nb] = (plan.part.owner == d).astype(np.float32)
+        self._owner_mask = owner_mask
+
+        sharded = P(AXIS)
+        repl = P()
+        if plan.config.sched == "levelset":
+            fn = (
+                _levelset_device_fn(plan)
+                if plan.config.comm == "zerocopy" or D == 1
+                else _levelset_unified_device_fn(plan)
+            )
+            in_specs = (sharded,) * 6 + (repl, repl, repl)
+            self._args = (plan.solve_rows, plan.upd_tiles, plan.tile_row,
+                          plan.tile_col, plan.tiles, owner_mask, plan.diag,
+                          plan.ex_levels)
+        else:
+            fn = _syncfree_device_fn(plan)
+            in_specs = (sharded,) * 5 + (repl, repl, repl, repl)
+            self._args = (plan.local_rows, plan.tile_row, plan.tile_col,
+                          plan.tiles, owner_mask, plan.diag, plan.indeg,
+                          plan.ex_boundary)
+        mapped = jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=P(),
+            check_vma=False,
+        )
+        self._jitted = jax.jit(mapped)
+
+    def solve_blocks(self, b_blocks: jax.Array) -> jax.Array:
+        B = self.plan.bs.B
+        b_pad = jnp.concatenate([b_blocks, jnp.zeros((1, B), b_blocks.dtype)])
+        return self._jitted(*self._args, b_pad)
+
+    def solve(self, b: np.ndarray) -> np.ndarray:
+        from repro.core.blocking import pad_rhs, unpad_x
+
+        b_blocks = jnp.asarray(pad_rhs(np.asarray(b, np.float32), self.plan.bs))
+        return unpad_x(np.asarray(self.solve_blocks(b_blocks)), self.plan.bs)
+
+
+def sptrsv(
+    a: CSR, b: np.ndarray, *, mesh: jax.sharding.Mesh | None = None,
+    config: SolverConfig = SolverConfig(),
+) -> np.ndarray:
+    """One-shot convenience API: analyse, plan, solve Lx=b."""
+    if mesh is None:
+        mesh = jax.make_mesh((1,), (AXIS,))
+    plan = build_plan(a, int(mesh.devices.size), config)
+    return DistributedSolver(plan, mesh).solve(b)

@@ -1,0 +1,2 @@
+from repro.distributed.meshutil import make_mesh
+from repro.distributed.sharding import batch_specs, cache_specs, param_specs

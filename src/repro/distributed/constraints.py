@@ -1,0 +1,48 @@
+"""Logical activation sharding constraints (MaxText-style).
+
+Model code tags each activation dim with a *logical* role; the tag resolves
+against the ambient mesh (``jax.set_mesh``) at trace time:
+
+  "dp"    -> every non-model axis (pod+data), if the dim divides
+  "model" -> the model axis, if the dim divides
+  None    -> replicated
+
+Without an ambient mesh (unit tests, single-device runs) this is an exact
+no-op, so model code stays mesh-agnostic. Explicit constraints pin down XLA's
+sharding propagation where it otherwise gives up (scan bodies, dynamic slices,
+gather/scatter dispatch) — dropping one of these was measured to replicate the
+flash-attention buffers across all 256 devices (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def constrain(x: jax.Array, *tags: str | None) -> jax.Array:
+    """Tags: "dp" (non-model axes), "model", "dpm" (ALL axes — fully
+    data-parallel batch, used when a layer family opts out of TP), None."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or "model" not in mesh.axis_names:
+        return x
+    assert len(tags) == x.ndim, (tags, x.shape)
+    msize = mesh.shape["model"]
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    all_axes = tuple(mesh.axis_names)
+    dsize = 1
+    for a in dp:
+        dsize *= mesh.shape[a]
+    asize = dsize * msize
+    assign = []
+    for dim, tag in zip(x.shape, tags):
+        if tag == "dp" and dim % dsize == 0 and dim >= dsize:
+            assign.append(dp if len(dp) > 1 else dp[0])
+        elif tag == "dpm" and dim % asize == 0 and dim >= asize:
+            assign.append(all_axes)
+        elif tag == "dpm" and dim % dsize == 0 and dim >= dsize:
+            assign.append(dp if len(dp) > 1 else dp[0])  # fall back to dp
+        elif tag == "model" and dim % msize == 0 and dim >= msize:
+            assign.append("model")
+        else:
+            assign.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*assign))

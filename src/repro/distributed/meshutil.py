@@ -1,0 +1,17 @@
+"""Mesh construction helpers (explicit Auto axis types, device subsets)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(shape, axes, devices=None) -> jax.sharding.Mesh:
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        devices=devices,
+    )
+
+
+def dp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """Data-parallel axes: every mesh axis that is not the model axis."""
+    return tuple(a for a in mesh.axis_names if a != "model")

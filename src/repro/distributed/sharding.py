@@ -1,0 +1,168 @@
+"""Sharding rules: TP/EP over the ``model`` axis, DP over ``pod``+``data``,
+optional FSDP (ZeRO-3 style parameter sharding over the data axes).
+
+Rules are *divisibility-aware*: each parameter kind carries a priority list of
+trailing dims to shard on the model axis; the first divisible dim wins, else
+the leaf stays replicated on that axis. Stacked (scan) leaves keep their
+leading period axis unsharded. FSDP then shards the largest remaining
+divisible dim over the data axes for leaves above ``fsdp_min_size`` — required
+to fit the 400B-class MoE archs in HBM (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+# trailing-dim shard priorities by parameter name (TP/EP on the model axis).
+# Attention shards HEADS or nothing: sub-head (hd / d_in) sharding was measured
+# to defeat SPMD propagation and replicate activations — non-divisible head
+# counts fall back to FSDP-only (EXPERIMENTS.md §Perf).
+_RULES = {
+    "embed": (0, 1),  # (vocab, d)
+    "lm_head": (1, 0),  # (d, vocab)
+    "wq": (1,), "wk": (1,), "wv": (1,),  # (d, H, hd): heads only
+    "wo": (0,),  # (H, hd, d) row-parallel over heads
+    "w1": (1,), "w3": (1,),  # mlp (d, f) col-parallel
+    "w2": (0,),  # mlp (f, d) row-parallel
+    "router": (1,),  # (d, E)
+    "z_proj": (1,), "x_in": (1,), "xbc_proj": (1,), "dtp": (1,),  # mamba cols
+    "out_proj": (0,),
+    "x_proj": (0,), "dt_proj": (1,),
+    "A_log": (0,), "Dskip": (0,), "dt_bias": (0,),
+    "conv_w": (1,), "conv_b": (0,),
+}
+_MOE_RULES = {"w1": (0,), "w2": (0,), "w3": (0,)}  # (E, d, f): expert parallelism
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for k in path:
+        if isinstance(k, DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            names.append(str(k.idx))
+    return names
+
+
+def _axis_size(mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _spec_for_leaf(names, shape, mesh, model_axis, fsdp_axes, fsdp_min_size,
+                   no_tp_names=frozenset()):
+    name = names[-1]
+    stacked = "slots" in names  # scan-stage leaves carry a leading period axis
+    dims = list(shape[1:] if stacked else shape)
+    assign: list = [None] * len(dims)
+
+    in_moe = "moe" in names
+    rules = _MOE_RULES if (in_moe and name in _MOE_RULES) else _RULES
+    msize = _axis_size(mesh, model_axis)
+    if name not in no_tp_names:
+        for d in rules.get(name, ()):
+            if d < len(dims) and dims[d] % msize == 0 and dims[d] >= msize:
+                assign[d] = model_axis
+                break
+
+    # FSDP: shard the largest remaining divisible dim over the data axes.
+    # Size gate uses the FULL leaf (incl. the stacked period axis) — memory is
+    # what matters, and scan stages stack 24-88 layers into one leaf.
+    if fsdp_axes and len(dims) >= 2:
+        size = 1
+        for s in shape:
+            size *= s
+        if size >= fsdp_min_size:
+            fsize = _axis_size(mesh, fsdp_axes)
+            cands = sorted(
+                (i for i in range(len(dims)) if assign[i] is None),
+                key=lambda i: -dims[i],
+            )
+            for i in cands:
+                if dims[i] % fsize == 0 and dims[i] >= fsize:
+                    assign[i] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+                    break
+    if stacked:
+        assign = [None] + assign
+    return P(*assign)
+
+
+# weight names that lose their model-axis (TP) assignment when a config opts
+# its SSM layers out of tensor parallelism (ModelConfig.ssm_tp=False)
+SSM_WEIGHT_NAMES = frozenset({
+    "x_in", "z_proj", "bc_proj", "dtp", "out_proj", "x_proj", "dt_proj",
+    "conv_w", "conv_b", "conv_bc_w", "conv_bc_b", "A_log", "Dskip", "dt_bias",
+})
+
+
+def param_specs(
+    params, mesh, *, model_axis: str = "model",
+    fsdp_axes: tuple[str, ...] = (), fsdp_min_size: int = 1 << 24,
+    no_tp_names: frozenset = frozenset(),
+):
+    """PartitionSpec pytree for a params (or optimizer-state) tree."""
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        return _spec_for_leaf(
+            names, leaf.shape, mesh, model_axis, fsdp_axes, fsdp_min_size,
+            no_tp_names,
+        )
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def batch_specs(batch, mesh, *, dp_axes: tuple[str, ...]):
+    """Shard dim0 (global batch) of every batch leaf over the DP axes."""
+    dsize = _axis_size(mesh, dp_axes)
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def leaf_spec(leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] % dsize == 0 and leaf.shape[0] >= dsize:
+            return P(dp, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree.map(leaf_spec, batch)
+
+
+def cache_specs(cache, mesh, *, model_axis: str = "model", dp_axes: tuple[str, ...] = ("data",)):
+    """Decode-cache specs: batch over DP; long KV sequence / SSM channels over model.
+
+    KV leaves are (B, S, K, hd) (+ leading stack axis); SSM ``h`` is
+    (B, nh|di, N[, hp]); conv states (B, K-1, C). Dim choice is again
+    divisibility-gated so batch=1 long-context cells degrade gracefully.
+    """
+    dsize = _axis_size(mesh, dp_axes)
+    msize = _axis_size(mesh, model_axis)
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        stacked = "slots" in names
+        dims = list(leaf.shape[1:] if stacked else leaf.shape)
+        assign: list = [None] * len(dims)
+        if name == "pos" or not dims:
+            return P(*([None] * leaf.ndim))
+        if dims[0] % dsize == 0 and dims[0] >= dsize:
+            assign[0] = dp  # batch
+        if name in ("k", "v") and len(dims) == 4:
+            if dims[1] % msize == 0:  # cache sequence dim (decode SP)
+                assign[1] = model_axis
+            elif dims[2] % msize == 0:  # kv heads
+                assign[2] = model_axis
+        elif name in ("h", "conv") and len(dims) >= 2:
+            for d in (1, 2):
+                if d < len(dims) and dims[d] % msize == 0 and dims[d] >= msize:
+                    assign[d] = model_axis
+                    break
+        if stacked:
+            assign = [None] + assign
+        return P(*assign)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)

@@ -1,0 +1,1 @@
+"""Pallas TPU kernels for the SpTRSV hot loop (validated in interpret mode)."""

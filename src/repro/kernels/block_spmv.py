@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: batched block GEMV for off-diagonal tile updates.
+
+The update half of the paper's solve-update phase (Alg. 3 lines 29–35): each
+strictly-lower tile L[r,c] contributes ``acc[r] += L[r,c] @ x[c]``. The kernel
+computes the per-tile products on the MXU; the scatter-add over destination
+rows is a segment-sum outside the kernel (racing scatter across grid programs
+is not expressible portably — destinations are combined with a deterministic
+jnp segment reduction, mirroring the paper's device-side atomics).
+
+``block_gemv_grouped`` processes G tiles per grid program so each MXU call is
+a (G*B, B) × (B,) batched matvec — the grouped layout raises MXU utilization
+(§Perf hillclimb knob).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemv_kernel(t_ref, x_ref, o_ref):
+    # t_ref: (1,B,B), x_ref: (1,B), o_ref: (1,B)
+    o_ref[0, :] = jnp.dot(
+        t_ref[0], x_ref[0, :], preferred_element_type=t_ref.dtype
+    )
+
+
+def _gemv_grouped_kernel(t_ref, x_ref, o_ref):
+    # t_ref: (G,B,B), x_ref: (G,B), o_ref: (G,B) — one fused batched matvec
+    o_ref[...] = jnp.einsum(
+        "gij,gj->gi", t_ref[...], x_ref[...], preferred_element_type=t_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_gemv(tiles: jax.Array, xs: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """Per-tile products: tiles (m,B,B) @ xs (m,B) -> (m,B)."""
+    m, B, _ = tiles.shape
+    return pl.pallas_call(
+        _gemv_kernel,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((1, B, B), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, B), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, B), tiles.dtype),
+        interpret=interpret,
+    )(tiles, xs)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "interpret"))
+def block_gemv_grouped(
+    tiles: jax.Array, xs: jax.Array, *, group: int = 8, interpret: bool = False
+) -> jax.Array:
+    """Same contract as block_gemv but G tiles per grid program (MXU batching)."""
+    m, B, _ = tiles.shape
+    pad = (-m) % group
+    if pad:
+        tiles = jnp.concatenate([tiles, jnp.zeros((pad, B, B), tiles.dtype)])
+        xs = jnp.concatenate([xs, jnp.zeros((pad, B), xs.dtype)])
+    mg = tiles.shape[0]
+    out = pl.pallas_call(
+        _gemv_grouped_kernel,
+        grid=(mg // group,),
+        in_specs=[
+            pl.BlockSpec((group, B, B), lambda i: (i, 0, 0)),
+            pl.BlockSpec((group, B), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((group, B), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mg, B), tiles.dtype),
+        interpret=interpret,
+    )(tiles, xs)
+    return out[:m]

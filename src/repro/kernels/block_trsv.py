@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: batched dense lower-triangular block solve (block-TRSV).
+
+TPU mapping of the paper's per-component solve (DESIGN.md §5.3): a wavefront's
+diagonal tiles are solved as dense B×B forward substitutions, one grid program
+per tile, with the whole tile resident in VMEM.
+
+Two in-kernel algorithms:
+* ``row-sweep``  — B scalar steps, each a masked VPU row·x dot (O(B) vector ops).
+* ``panel``      — processes P=8 rows per step: a tiny unrolled P×P triangle
+  followed by a rank-P MXU update of the remaining rhs. ~P× fewer sequential
+  steps; this is the §Perf variant (hillclimbed in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _trsv_rowsweep_kernel(l_ref, r_ref, x_ref):
+    # l_ref: (1,B,B)  r_ref/x_ref: (1,B)
+    B = l_ref.shape[-1]
+    L = l_ref[0]  # (B,B) loaded to VMEM/registers
+    r = r_ref[...]  # (1,B)
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, B), 1)
+
+    def body(i, x):
+        # partial dot over solved prefix: sum_j<i L[i,j] * x[j]
+        li = jax.lax.dynamic_slice(L, (i, 0), (1, B))  # (1,B) row i
+        s = jnp.sum(jnp.where(col < i, li * x, 0.0))
+        lii = jnp.sum(jnp.where(col == i, li, 0.0))
+        ri = jnp.sum(jnp.where(col == i, r, 0.0))
+        xi = (ri - s) / lii
+        return jnp.where(col == i, xi, x)
+
+    x_ref[...] = jax.lax.fori_loop(0, B, body, jnp.zeros((1, B), l_ref.dtype))
+
+
+def _trsv_panel_kernel(l_ref, r_ref, x_ref, *, panel: int):
+    # Panel forward substitution: solve P rows with the row sweep, then one
+    # (B,P)@(P,) MXU-shaped rank-P update of the remaining rhs.
+    B = l_ref.shape[-1]
+    P = panel
+    L = l_ref[0]
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, B), 1)
+
+    def outer(p, carry):
+        r, x = carry  # both (1,B); r is the running rhs (updated by prior panels)
+        base = p * P
+
+        def inner(q, x):
+            i = base + q
+            li = jax.lax.dynamic_slice(L, (i, 0), (1, B))
+            in_panel_prefix = jnp.logical_and(col >= base, col < i)
+            s = jnp.sum(jnp.where(in_panel_prefix, li * x, 0.0))
+            lii = jnp.sum(jnp.where(col == i, li, 0.0))
+            ri = jnp.sum(jnp.where(col == i, r, 0.0))
+            xi = (ri - s) / lii
+            return jnp.where(col == i, xi, x)
+
+        x = jax.lax.fori_loop(0, P, inner, x)
+        # rank-P update of the trailing rhs: r -= L[:, base:base+P] @ x[base:base+P]
+        Lp = jax.lax.dynamic_slice(L, (0, base), (B, P))  # (B,P)
+        xp = jax.lax.dynamic_slice(x, (0, base), (1, P))  # (1,P)
+        upd = jnp.dot(Lp, xp[0], preferred_element_type=jnp.float32)  # (B,)
+        r = jnp.where(col >= base + P, r - upd[None, :], r)
+        return r, x
+
+    _, x = jax.lax.fori_loop(
+        0, B // P, outer, (r_ref[...], jnp.zeros((1, B), l_ref.dtype))
+    )
+    x_ref[...] = x
+
+
+@functools.partial(jax.jit, static_argnames=("algorithm", "panel", "interpret"))
+def block_trsv(
+    diag: jax.Array,
+    rhs: jax.Array,
+    *,
+    algorithm: str = "rowsweep",
+    panel: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched solve of k dense lower-triangular tiles: (k,B,B),(k,B)->(k,B)."""
+    k, B, _ = diag.shape
+    if algorithm == "rowsweep":
+        kernel = _trsv_rowsweep_kernel
+    elif algorithm == "panel":
+        assert B % panel == 0
+        kernel = functools.partial(_trsv_panel_kernel, panel=panel)
+    else:
+        raise ValueError(algorithm)
+    return pl.pallas_call(
+        kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, B, B), lambda i: (i, 0, 0)),  # one tile in VMEM per program
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, B), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, B), diag.dtype),
+        interpret=interpret,
+    )(diag, rhs)

@@ -1,0 +1,48 @@
+"""Public jit'd kernel wrappers with backend dispatch.
+
+Backends:
+* ``reference`` — pure jnp (XLA) oracles from :mod:`repro.kernels.ref`; the
+  default on CPU where Pallas interpret mode would be pure-Python slow.
+* ``pallas``    — the TPU kernels; on CPU they run in interpret mode
+  (used by tests to validate kernel semantics), on TPU they compile natively.
+
+Select globally with env ``REPRO_KERNEL_BACKEND`` or per-call with ``backend=``.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.block_spmv import block_gemv, block_gemv_grouped
+from repro.kernels.block_trsv import block_trsv
+
+
+def _default_backend() -> str:
+    env = os.environ.get("REPRO_KERNEL_BACKEND")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def batched_block_trsv(diag: jax.Array, rhs: jax.Array, *, backend: str | None = None,
+                       algorithm: str = "rowsweep") -> jax.Array:
+    backend = backend or _default_backend()
+    if backend == "reference":
+        return ref.block_trsv_ref(diag, rhs)
+    return block_trsv(diag, rhs, algorithm=algorithm, interpret=_interpret())
+
+
+def batched_block_gemv(tiles: jax.Array, xs: jax.Array, *, backend: str | None = None,
+                       group: int = 0) -> jax.Array:
+    backend = backend or _default_backend()
+    if backend == "reference":
+        return ref.block_gemv_ref(tiles, xs)
+    if group > 1:
+        return block_gemv_grouped(tiles, xs, group=group, interpret=_interpret())
+    return block_gemv(tiles, xs, interpret=_interpret())

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels (independent implementations).
+
+These are the ground truth for tests/*: every Pallas kernel must match its
+oracle over a sweep of shapes and dtypes (interpret mode on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_trsv_ref(diag: jax.Array, rhs: jax.Array) -> jax.Array:
+    """Batched dense lower-triangular solve: diag (k,B,B), rhs (k,B) -> (k,B)."""
+    sol = jax.lax.linalg.triangular_solve(
+        diag, rhs[..., None], left_side=True, lower=True, transpose_a=False
+    )
+    return sol[..., 0]
+
+
+def block_gemv_ref(tiles: jax.Array, xs: jax.Array) -> jax.Array:
+    """Batched tile*vector: tiles (m,B,B), xs (m,B) -> (m,B)."""
+    return jnp.einsum("mij,mj->mi", tiles, xs)
+
+
+def fused_level_ref(
+    diag: jax.Array,  # (k,B,B) diagonal tiles of the wavefront rows
+    rhs: jax.Array,  # (k,B)   b - acc for those rows
+    tiles: jax.Array,  # (m,B,B) off-diagonal tiles sourced at this wavefront
+    src: jax.Array,  # (m,) index into the wavefront's k solves for each tile's column
+) -> tuple[jax.Array, jax.Array]:
+    """Solve a wavefront then produce the per-tile updates it triggers."""
+    x = block_trsv_ref(diag, rhs)
+    prods = block_gemv_ref(tiles, x[src])
+    return x, prods

@@ -1,0 +1,32 @@
+"""Production mesh construction (function, not module constant — importing
+this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(
+        shape, axes, devices=jax.devices()[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_host_mesh(n: int | None = None, axes=("data", "model")) -> jax.sharding.Mesh:
+    """Small mesh over however many (CPU) devices exist — smoke tests/benches."""
+    devs = jax.devices()
+    n = n or len(devs)
+    if len(axes) == 2:
+        model = 1
+        shape = (n // model, model)
+    else:
+        shape = (n,)
+    return jax.make_mesh(
+        shape, axes, devices=devs[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )

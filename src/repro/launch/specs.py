@@ -1,0 +1,155 @@
+"""ShapeDtypeStruct input builders for every (arch × shape-cell × mesh).
+
+The dry-run lowers abstract shapes only — no allocation. All leaves are
+weak-type-correct ShapeDtypeStructs carrying NamedShardings so
+``jax.jit(...).lower(...)`` sees the intended production layout.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.distributed.meshutil import dp_axes as _dp_axes
+from repro.distributed.sharding import batch_specs, cache_specs, param_specs
+from repro.models import init_cache, init_params
+from repro.models.config import ModelConfig
+from repro.train.optim import adamw_init
+
+# archs whose optimizer state is kept in bf16 to fit 16 GB/chip (noted §Dry-run)
+BF16_OPT = {"llama4-maverick-400b-a17b", "arctic-480b", "granite-34b"}
+
+# train_4k gradient-accumulation microbatches: bounds per-device activation
+# liveness (saved residuals scale with local batch) for the big archs
+TRAIN_MICROBATCHES = {
+    "llama4-maverick-400b-a17b": 8,
+    "arctic-480b": 8,
+    "granite-34b": 4,
+    "zamba2-7b": 2,
+    "yi-6b": 2,
+    "seamless-m4t-medium": 1,
+}
+
+
+def train_microbatches(arch: str) -> int:
+    """Per-arch default, overridable for §Perf A/B runs."""
+    env = os.environ.get("REPRO_MICROBATCHES")
+    return int(env) if env else TRAIN_MICROBATCHES.get(arch, 1)
+
+
+def _sds(tree, mesh, spec_tree):
+    def one(leaf, spec):
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=NamedSharding(mesh, spec))
+
+    return jax.tree.map(one, tree, spec_tree, is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def abstract_params(cfg: ModelConfig, mesh, *, fsdp=True):
+    from repro.distributed.sharding import SSM_WEIGHT_NAMES
+
+    params = jax.eval_shape(functools.partial(init_params, cfg), jax.random.key(0))
+    fsdp_axes = _dp_axes(mesh) if fsdp else ()
+    no_tp = SSM_WEIGHT_NAMES if not cfg.ssm_tp else frozenset()
+    specs = param_specs(params, mesh, fsdp_axes=fsdp_axes, no_tp_names=no_tp)
+    return _sds(params, mesh, specs), specs
+
+
+def abstract_opt(cfg: ModelConfig, params_sds, mesh, *, fsdp=True):
+    from repro.distributed.sharding import SSM_WEIGHT_NAMES
+
+    state_dtype = jnp.bfloat16 if cfg.name in BF16_OPT else jnp.float32
+    opt = jax.eval_shape(functools.partial(adamw_init, state_dtype=state_dtype), params_sds)
+    fsdp_axes = _dp_axes(mesh) if fsdp else ()
+    no_tp = SSM_WEIGHT_NAMES if not cfg.ssm_tp else frozenset()
+    specs = {
+        "m": param_specs(opt["m"], mesh, fsdp_axes=fsdp_axes, no_tp_names=no_tp),
+        "v": param_specs(opt["v"], mesh, fsdp_axes=fsdp_axes, no_tp_names=no_tp),
+        "step": P(),
+    }
+    return _sds(opt, mesh, specs), specs
+
+
+def batch_shapes(cfg: ModelConfig, seq_len: int, global_batch: int, step: str) -> dict:
+    """Abstract batch for a shape cell (train/prefill need S tokens; decode 1)."""
+    S = seq_len if step != "decode" else 1
+    b: dict = {}
+    if cfg.input_kind == "tokens":
+        b["tokens"] = jax.ShapeDtypeStruct((global_batch, S), jnp.int32)
+    else:
+        b["embeds"] = jax.ShapeDtypeStruct((global_batch, S, cfg.d_model), jnp.float32)
+    if step == "train":
+        b["labels"] = jax.ShapeDtypeStruct((global_batch, S), jnp.int32)
+        if cfg.enc_layers:
+            b["enc_embeds"] = jax.ShapeDtypeStruct(
+                (global_batch, cfg.enc_seq, cfg.d_model), jnp.float32
+            )
+    elif step == "prefill" and cfg.enc_layers:
+        b["enc_out"] = jax.ShapeDtypeStruct(
+            (global_batch, cfg.enc_seq, cfg.d_model), jnp.float32
+        )
+    return b
+
+
+def input_specs(arch: str, shape: str, mesh) -> dict:
+    """All abstract inputs for one dry-run cell: params (+opt/batch/cache)."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    dp = _dp_axes(mesh)
+    out: dict = {"cfg": cfg, "cell": cell}
+    params_sds, pspecs = abstract_params(cfg, mesh)
+    out["params"] = params_sds
+    out["param_specs"] = pspecs
+    batch = batch_shapes(cfg, cell.seq_len, cell.global_batch, cell.step)
+    bspecs = batch_specs(batch, mesh, dp_axes=dp)
+    out["batch"] = _sds(batch, mesh, bspecs)
+    out["batch_specs"] = bspecs
+    if cell.step == "train":
+        opt_sds, ospecs = abstract_opt(cfg, params_sds, mesh)
+        out["opt"] = opt_sds
+        out["opt_specs"] = ospecs
+    else:
+        cache = jax.eval_shape(
+            functools.partial(init_cache, cfg, cell.global_batch, cell.seq_len)
+        )
+        cspecs = cache_specs(cache, mesh, dp_axes=dp)
+        out["cache"] = _sds(cache, mesh, cspecs)
+        out["cache_specs"] = cspecs
+    return out
+
+
+def model_flops(cfg: ModelConfig, seq_len: int, global_batch: int, step: str) -> float:
+    """MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (fwd-only), D = tokens."""
+    n_active = active_param_count(cfg)
+    tokens = global_batch * (seq_len if step != "decode" else 1)
+    mult = 6.0 if step == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def active_param_count(cfg: ModelConfig) -> float:
+    """Per-token active parameters (MoE counts top_k experts, not all)."""
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.hd
+    n_mlp = d * f * (3 if cfg.mlp_gated else 2)
+    n_attn = d * cfg.n_heads * hd * 2 + d * cfg.n_kv * hd * 2
+    per_kind = {
+        "A": n_attn + n_mlp, "L": n_attn + n_mlp, "H": n_attn + n_mlp,
+        "D": n_attn + n_mlp,
+        "C": 2 * n_attn + n_mlp,
+        "E": n_attn + cfg.top_k * 3 * d * f + d * cfg.n_experts
+        + (3 * d * cfg.moe_dense_ff if cfg.moe_dense_ff else 0),
+        "M": 0, "S": 0,
+    }
+    if cfg.ssm_state:
+        di = cfg.d_inner
+        per_kind["M"] = d * 2 * di + di * d + di * (-(-d // 16) + 2 * cfg.ssm_state) \
+            + (-(-d // 16)) * di
+        nh = di // cfg.mamba_headdim
+        per_kind["S"] = d * (2 * di + 2 * cfg.ssm_state + nh) + di * d
+    total = sum(per_kind[k] for k in cfg.layer_kinds)
+    total += sum(per_kind[k] for k in cfg.enc_layer_kinds)
+    total += cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+    return float(total)

@@ -1,0 +1,3 @@
+"""LM architecture zoo: dense/GQA, MoE, Mamba1/2, hybrid, enc-dec, VLM/audio stubs."""
+from repro.models.config import ModelConfig
+from repro.models.model import forward, init_params, init_cache, param_count

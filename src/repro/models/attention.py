@@ -1,0 +1,253 @@
+"""GQA attention (global / sliding-window / cross) with KV-cache decode.
+
+TP layout: Q heads shard over the model axis when divisible (the sharding
+rules leave attention weights FSDP-only otherwise); GQA K/V heads are
+**repeated to H at use** so every attention einsum carries a single
+head axis that propagates cleanly (the (K, g) split defeats XLA's SPMD
+propagation — measured as full activation replication, EXPERIMENTS.md §Perf).
+The KV *cache* stays K-headed (memory), repeat happens after the cache read.
+
+Long sequences (S >= FLASH_THRESHOLD) use a flash-style double-chunked
+online-softmax (``_flash``): O(S·chunk) live memory instead of O(S²) score
+matrices — required for the 32k/500k cells to fit HBM. Training wraps the
+inner kv step in ``jax.checkpoint`` so the backward *recomputes* the p-matrix
+per chunk pair (otherwise autodiff saves all nq·nk score blocks and the flash
+memory win evaporates). Inference uses a ``fori_loop`` with data-dependent
+trip count: causally masked kv chunks are skipped as compute, not just values.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constraints import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rotary, softcap
+
+FLASH_THRESHOLD = 2048
+FLASH_CHUNK = 1024
+
+
+def head_pad_mask(cfg: ModelConfig, dtype=jnp.float32) -> jax.Array | None:
+    """1.0 for real Q-head slots, 0.0 for padding. Padding is PER KV GROUP
+    (each group of g real heads pads to g_pad) so the GQA repeat keeps every
+    real head aligned with its own KV head."""
+    H, K = cfg.n_heads, cfg.n_kv
+    Hp = max(H, cfg.head_pad_to)
+    if Hp == H:
+        return None
+    assert Hp % K == 0, (Hp, K)
+    g, gp = H // K, Hp // K
+    return ((jnp.arange(Hp) % gp) < g).astype(dtype)
+
+
+def init_attn(key, cfg: ModelConfig, dtype) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    Hp = max(H, cfg.head_pad_to)
+    assert Hp % K == 0, (Hp, K)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, dtype, (d, Hp, hd)),
+        "wk": dense_init(ks[1], d, K * hd, dtype, (d, K, hd)),
+        "wv": dense_init(ks[2], d, K * hd, dtype, (d, K, hd)),
+        "wo": dense_init(ks[3], H * hd, d, dtype, (Hp, hd, d)),
+    }
+    mask = head_pad_mask(cfg, dtype)
+    if mask is not None:  # zero padded heads: no contribution, zero gradients
+        p["wq"] = p["wq"] * mask[None, :, None]
+        p["wo"] = p["wo"] * mask[:, None, None]
+    return p
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window: int) -> jax.Array:
+    m = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), jnp.bool_)
+    if causal:
+        m = k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        m = jnp.logical_and(m, k_pos[None, :] > q_pos[:, None] - window)
+    return m
+
+
+def _repeat_kv(k: jax.Array, g: int, *, seq_sharded: bool = False) -> jax.Array:
+    """(B, S, K, hd) -> (B, S, K*g, hd). Head-sharded downstream by default;
+    ``seq_sharded`` keeps the cache-sequence dim sharded instead (decode-SP)."""
+    if g == 1:
+        return k
+    tags = ("dp", "model", None, None) if seq_sharded else ("dp", None, "model", None)
+    return constrain(jnp.repeat(k, g, axis=2), *tags)
+
+
+def _flash(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, H, hd)  (already repeated to H)
+    v: jax.Array,
+    cfg: ModelConfig,
+    *,
+    causal: bool,
+    window: int,
+    chunk: int = FLASH_CHUNK,
+    differentiable: bool = False,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    cq = min(chunk, Sq)
+    ck = min(chunk, Sk)
+    assert Sq % cq == 0 and Sk % ck == 0, (Sq, Sk, chunk)
+    nq, nk = Sq // cq, Sk // ck
+    scale = hd ** -0.5
+    kc = k.reshape(B, nk, ck, H, hd)
+    vc = v.reshape(B, nk, ck, H, hd)
+
+    def q_chunk_step(_, qi):
+        qc = jax.lax.dynamic_slice_in_dim(q, qi * cq, cq, axis=1)  # (B,cq,H,hd)
+        qc = constrain(qc, "dp", None, "model", None)
+        q_pos = qi * cq + jnp.arange(cq)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kck = jax.lax.dynamic_index_in_dim(kc, ki, 1, keepdims=False)
+            vck = jax.lax.dynamic_index_in_dim(vc, ki, 1, keepdims=False)
+            kck = constrain(kck, "dp", None, "model", None)
+            vck = constrain(vck, "dp", None, "model", None)
+            k_pos = ki * ck + jnp.arange(ck)
+            s = jnp.einsum("bshd,bthd->bhst", qc, kck).astype(jnp.float32) * scale
+            if cfg.softcap > 0:
+                s = softcap(s, cfg.softcap)
+            mask = jnp.ones((cq, ck), jnp.bool_)
+            if causal:
+                mask = k_pos[None, :] <= q_pos[:, None]
+            if window > 0:
+                mask = jnp.logical_and(mask, k_pos[None, :] > q_pos[:, None] - window)
+            s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            # fully-masked chunks must add zero mass even while the running
+            # max sits at the -1e30 sentinel
+            p = jnp.where(mask[None, None], p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhst,bthd->bhsd", p.astype(qc.dtype), vck)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, cq), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, cq), jnp.float32)
+        a0 = jnp.zeros((B, H, cq, hd), q.dtype)
+        if differentiable:
+            # scan all chunks; checkpoint the body so backward RECOMPUTES the
+            # p-matrices chunk-by-chunk (flash-backward memory profile)
+            (m, l, acc), _ = jax.lax.scan(
+                jax.checkpoint(kv_step), (m0, l0, a0), jnp.arange(nk)
+            )
+        else:
+            if causal:  # data-dependent trip count: skip fully-masked chunks
+                hi = qi + 1
+                lo = jnp.maximum(0, (qi * cq - window) // ck) if window > 0 else 0
+            else:
+                hi, lo = nk, 0
+            body = lambda ki, carry: kv_step(carry, ki)[0]
+            m, l, acc = jax.lax.fori_loop(lo, hi, body, (m0, l0, a0))
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        return None, out.transpose(0, 2, 1, 3)  # (B,cq,H,hd)
+
+    _, chunks = jax.lax.scan(q_chunk_step, None, jnp.arange(nq))
+    # chunks: (nq, B, cq, H, hd) -> (B, Sq, H, hd)
+    return chunks.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+
+
+def attention(
+    p: dict,
+    x: jax.Array,  # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,  # (S,) absolute positions of x tokens
+    window: int = 0,  # 0 = global
+    cache: dict | None = None,  # self: {"k","v","pos"}; cross: {"k","v"}
+    kv_source: jax.Array | None = None,  # cross-attention memory (B, S_kv, d)
+    causal: bool = True,
+    is_cross: bool = False,
+) -> tuple[jax.Array, dict | None]:
+    B, S, d = x.shape
+    K, hd = cfg.n_kv, cfg.hd
+    H = p["wq"].shape[1]  # may exceed cfg.n_heads under head padding
+    g = H // K
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q = constrain(q, "dp", None, "model", None)
+
+    if is_cross:
+        if kv_source is not None:  # (pre)fill: compute cross K/V from encoder
+            k = jnp.einsum("bsd,dhk->bshk", kv_source, p["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", kv_source, p["wv"])
+            cache = {"k": k, "v": v} if cache is not None else None
+        else:  # decode: use precomputed cross K/V
+            k, v = cache["k"], cache["v"]
+        k, v = _repeat_kv(k, g), _repeat_kv(v, g)
+        mask = jnp.ones((S, k.shape[1]), jnp.bool_)
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        q = rotary(q, positions, cfg.rope_theta)
+        k = rotary(k, positions, cfg.rope_theta)
+        if cache is not None and S == cache["k"].shape[1]:
+            # full prefill: the fresh K/V ARE the cache (positions 0..S-1)
+            cache = {"k": k.astype(cache["k"].dtype),
+                     "v": v.astype(cache["v"].dtype),
+                     "pos": jnp.asarray(S, jnp.int32)}
+            mask = _mask(positions, positions, causal=causal, window=window)
+        elif cache is not None:
+            # decode: write the new k/v at `pos`, attend over the whole cache
+            pos = cache["pos"]
+            ck_ = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            cv_ = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+            k, v = ck_, cv_
+            k_pos = jnp.arange(k.shape[1])
+            q_pos = pos + jnp.arange(S)
+            mask = k_pos[None, :] <= q_pos[:, None]
+            if window > 0:
+                mask = jnp.logical_and(mask, k_pos[None, :] > q_pos[:, None] - window)
+            cache = {"k": ck_, "v": cv_, "pos": pos + S}
+        else:
+            mask = _mask(positions, positions, causal=causal, window=window)
+        decode_sp = (cache is not None and k.shape[1] != S
+                     and os.environ.get("REPRO_DECODE_SP", "1") == "1")
+        k = _repeat_kv(k, g, seq_sharded=decode_sp)
+        v = _repeat_kv(v, g, seq_sharded=decode_sp)
+
+    if not is_cross and k.shape[1] == S and S >= FLASH_THRESHOLD:
+        # flash path; cache==None means a train/eval call that may be grad'ed
+        out = _flash(q, k, v, cfg, causal=causal, window=window,
+                     differentiable=cache is None)
+    else:
+        decode_sp = (not is_cross and cache is not None and k.shape[1] != S
+                     and os.environ.get("REPRO_DECODE_SP", "1") == "1")
+        if decode_sp:
+            # decode-SP: the cache shards its SEQUENCE dim over the model axis
+            # (cache_specs) — keep attention sharded over it (distributed
+            # softmax: psum of per-shard max/sum + partial p·v) instead of
+            # letting SPMD all-gather the f32-repeated cache every layer
+            # (measured 521 GB/step on llama4 decode — §Perf hillclimb 2).
+            q = constrain(q, "dp", None, None, None)
+            k = constrain(k, "dp", "model", None, None)
+            v = constrain(v, "dp", "model", None, None)
+        scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+        if decode_sp:
+            scores = constrain(scores, "dp", None, None, "model")
+        scores = scores * (hd ** -0.5)
+        if cfg.softcap > 0:
+            scores = softcap(scores, cfg.softcap)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhst,bthd->bshd", w, v)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, cache
+
+
+def init_cross_cache(p: dict, enc_out: jax.Array) -> dict:
+    """Precompute cross-attention K/V from encoder output (prefill-time)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    return {"k": k, "v": v}

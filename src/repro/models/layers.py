@@ -1,0 +1,67 @@
+"""Shared neural-net primitives (pytree params, functional apply)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def uniform_init(key, shape, scale, dtype):
+    return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype) * scale
+
+
+def dense_init(key, d_in, d_out, dtype, shape=None):
+    shape = shape or (d_in, d_out)
+    return uniform_init(key, shape, d_in ** -0.5, dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap if cap > 0 else x
+
+
+def rotary(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """RoPE. x: (..., S, H, hd); positions: (..., S) broadcastable."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (.., S, 1, half)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def embed_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    return jnp.take(table, ids, axis=0)
+
+
+def vocab_pad_mask(logits: jax.Array, valid_vocab: int) -> jax.Array:
+    """-inf the padded vocab tail so pad ids never receive probability mass."""
+    vp = logits.shape[-1]
+    if vp == valid_vocab:
+        return logits
+    keep = jnp.arange(vp) < valid_vocab
+    return jnp.where(keep, logits, -1e30)
+
+
+def cross_entropy(
+    logits: jax.Array, labels: jax.Array, final_cap: float = 0.0,
+    valid_vocab: int | None = None,
+) -> jax.Array:
+    """Mean token cross-entropy; logits promoted to f32 for the reduction."""
+    logits = logits.astype(jnp.float32)
+    if final_cap > 0:
+        logits = softcap(logits, final_cap)
+    if valid_vocab is not None:
+        logits = vocab_pad_mask(logits, valid_vocab)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,24 @@
+"""Dense feed-forward blocks: SwiGLU (llama family) and plain GELU (granite)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_mlp(key, d: int, f: int, gated: bool, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w1": dense_init(ks[0], d, f, dtype), "w2": dense_init(ks[1], f, d, dtype)}
+    if gated:
+        p["w3"] = dense_init(ks[2], d, f, dtype)
+    return p
+
+
+def mlp(p: dict, x: jax.Array, gated: bool) -> jax.Array:
+    h = x @ p["w1"]
+    if gated:
+        h = jax.nn.silu(h) * (x @ p["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["w2"]

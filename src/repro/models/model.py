@@ -1,0 +1,314 @@
+"""Model assembly: pattern-driven stage plan, scan-over-periods execution.
+
+The layer stack is compiled (at trace time) into **stages**:
+* a ``scan`` stage covers ``n`` repetitions of the config's pattern period —
+  parameters are stacked on a leading period axis and executed with
+  ``lax.scan`` (bounded HLO size for 88-layer × 512-device lowering);
+* a ``block`` stage is a single layer (pattern remainders, shared blocks).
+
+Shared blocks (zamba2's ``H``) keep ONE parameter set, closed over the scan
+body, while their KV caches remain per-position (stacked).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constraints import constrain
+from repro.models.attention import attention, init_attn
+from repro.models.config import ModelConfig
+from repro.models.layers import cross_entropy, dense_init, embed_lookup, rms_norm
+from repro.models.mlp import init_mlp, mlp
+from repro.models.moe import init_moe, moe_ffn
+from repro.models.ssm import init_mamba1, init_mamba2, mamba1, mamba2
+
+ATTN_KINDS = set("ALEDCH")
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    type: str  # "scan" | "block"
+    pattern: str  # kinds within one period (scan) or single kind (block)
+    n: int  # number of periods (scan) or 1
+
+
+def build_stage_plan(pattern: str, kinds: tuple[str, ...]) -> list[StageSpec]:
+    period = pattern if len(set(pattern)) > 1 else (kinds[0] if kinds else "A")
+    plan: list[StageSpec] = []
+    n_layers = len(kinds)
+    if len(period) > 1:
+        n_periods = n_layers // len(period)
+        if n_periods > 0:
+            plan.append(StageSpec("scan", period, n_periods))
+        for k in kinds[n_periods * len(period):]:
+            plan.append(StageSpec("block", k, 1))
+    else:
+        plan.append(StageSpec("scan", period[0], n_layers))
+    # merge: a scan with a single period is just blocks
+    out: list[StageSpec] = []
+    for s in plan:
+        if s.type == "scan" and s.n == 1:
+            out.extend(StageSpec("block", k, 1) for k in s.pattern)
+        else:
+            out.append(s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, kind: str, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    if kind in ("M",):
+        return {"ln": jnp.zeros((d,), dtype), "mix": init_mamba1(ks[0], cfg, dtype)}
+    if kind in ("S",):
+        return {"ln": jnp.zeros((d,), dtype), "mix": init_mamba2(ks[0], cfg, dtype)}
+    p = {
+        "ln1": jnp.zeros((d,), dtype),
+        "attn": init_attn(ks[0], cfg, dtype),
+        "ln2": jnp.zeros((d,), dtype),
+    }
+    if kind == "E":
+        p["moe"] = init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[1], d, cfg.d_ff, cfg.mlp_gated, dtype)
+    if kind == "C":
+        p["lnx"] = jnp.zeros((d,), dtype)
+        p["xattn"] = init_attn(ks[2], cfg, dtype)
+    return p
+
+
+def _init_stage(key, spec: StageSpec, cfg: ModelConfig, dtype) -> dict:
+    if spec.type == "block":
+        return {"block": _init_block(key, spec.pattern, cfg, dtype)}
+    slots: dict = {}
+    shared: dict = {}
+    keys = jax.random.split(key, len(spec.pattern) + 1)
+    for j, kind in enumerate(spec.pattern):
+        if kind == "H":  # one shared parameter set for all periods
+            shared[str(j)] = _init_block(keys[j], kind, cfg, dtype)
+        else:
+            init_one = lambda k: _init_block(k, kind, cfg, dtype)
+            slots[str(j)] = jax.vmap(init_one)(jax.random.split(keys[j], spec.n))
+    return {"slots": slots, "shared": shared}
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    params: dict = {}
+    if cfg.input_kind == "tokens" or cfg.vocab:
+        params["embed"] = dense_init(
+            ks[0], cfg.padded_vocab, cfg.d_model, dtype, (cfg.padded_vocab, cfg.d_model)
+        )
+    plan = build_stage_plan(cfg.pattern, cfg.layer_kinds)
+    skeys = jax.random.split(ks[1], len(plan))
+    params["stages"] = [_init_stage(skeys[i], s, cfg, dtype) for i, s in enumerate(plan)]
+    params["final_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.padded_vocab, dtype)
+    if cfg.enc_layers:
+        enc_plan = build_stage_plan(cfg.enc_pattern, cfg.enc_layer_kinds)
+        ekeys = jax.random.split(ks[3], len(enc_plan))
+        params["encoder"] = {
+            "stages": [_init_stage(ekeys[i], s, cfg, dtype) for i, s in enumerate(enc_plan)],
+            "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        }
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+
+def _block_cache(kind: str, cfg: ModelConfig, batch: int, max_seq: int, dtype):
+    if kind == "M":
+        return {
+            "conv": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_inner), dtype),
+            "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        }
+    if kind == "S":
+        nh = cfg.d_inner // cfg.mamba_headdim
+        return {
+            "conv": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_inner), dtype),
+            "conv_bc": jnp.zeros((batch, cfg.conv_kernel - 1, 2 * cfg.ssm_state), dtype),
+            "h": jnp.zeros((batch, nh, cfg.ssm_state, cfg.mamba_headdim), jnp.float32),
+        }
+    c = {
+        "attn": {
+            "k": jnp.zeros((batch, max_seq, cfg.n_kv, cfg.hd), dtype),
+            "v": jnp.zeros((batch, max_seq, cfg.n_kv, cfg.hd), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    }
+    if kind == "C":
+        c["cross"] = {
+            "k": jnp.zeros((batch, cfg.enc_seq or max_seq, cfg.n_kv, cfg.hd), dtype),
+            "v": jnp.zeros((batch, cfg.enc_seq or max_seq, cfg.n_kv, cfg.hd), dtype),
+        }
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> list:
+    dtype = jnp.dtype(cfg.dtype)
+    plan = build_stage_plan(cfg.pattern, cfg.layer_kinds)
+    caches = []
+    for spec in plan:
+        if spec.type == "block":
+            caches.append({"block": _block_cache(spec.pattern, cfg, batch, max_seq, dtype)})
+        else:
+            slots = {
+                str(j): jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (spec.n,) + x.shape),
+                    _block_cache(kind, cfg, batch, max_seq, dtype),
+                )
+                for j, kind in enumerate(spec.pattern)
+            }
+            caches.append({"slots": slots})
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(
+    kind: str, p: dict, x: jax.Array, cfg: ModelConfig, *, positions,
+    cache=None, enc_out=None, causal=True,
+):
+    x = constrain(x, "dp", None, None)  # residual stream: batch over DP axes
+    if kind in ("M", "S"):
+        fn = mamba1 if kind == "M" else mamba2
+        out, new_c = fn(p["mix"], rms_norm(x, p["ln"], cfg.norm_eps), cfg, cache)
+        return x + out.astype(x.dtype), new_c
+    new_cache = dict(cache) if cache is not None else None
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    window = cfg.sliding_window if kind == "L" else 0
+    a, c_attn = attention(
+        p["attn"], h, cfg, positions=positions, window=window,
+        cache=cache["attn"] if cache else None, causal=causal,
+    )
+    if new_cache is not None:
+        new_cache["attn"] = c_attn
+    x = x + a.astype(x.dtype)
+    if kind == "C" and (enc_out is not None or cache is not None):
+        h = rms_norm(x, p["lnx"], cfg.norm_eps)
+        xc = cache["cross"] if cache else None
+        a, nxc = attention(p["xattn"], h, cfg, positions=positions, cache=xc,
+                           kv_source=enc_out, is_cross=True)
+        if new_cache is not None:
+            new_cache["cross"] = nxc
+        x = x + a.astype(x.dtype)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    f = moe_ffn(p["moe"], h, cfg) if kind == "E" else mlp(p["mlp"], h, cfg.mlp_gated)
+    return x + f.astype(x.dtype), new_cache
+
+
+def _apply_stages(
+    stages_params: list, plan: list[StageSpec], x: jax.Array, cfg: ModelConfig, *,
+    positions, caches=None, enc_out=None, causal=True, remat=False,
+):
+    new_caches = []
+    for i, spec in enumerate(plan):
+        sp = stages_params[i]
+        cache_i = caches[i] if caches is not None else None
+        if spec.type == "block":
+            blk = functools.partial(
+                _apply_block, spec.pattern, cfg=cfg, positions=positions,
+                enc_out=enc_out, causal=causal,
+            )
+            if remat:
+                blk = jax.checkpoint(blk)
+            x, nc = blk(sp["block"], x, cache=cache_i["block"] if cache_i else None)
+            new_caches.append({"block": nc})
+        else:
+            shared = sp["shared"]
+
+            def period_body(h, xs):
+                slot_params, slot_caches = xs
+                new_slot_caches = {}
+                for j, kind in enumerate(spec.pattern):
+                    p_j = shared[str(j)] if kind == "H" else slot_params[str(j)]
+                    c_j = slot_caches.get(str(j)) if slot_caches else None
+                    h, nc_j = _apply_block(
+                        kind, p_j, h, cfg, positions=positions,
+                        cache=c_j, enc_out=enc_out, causal=causal,
+                    )
+                    if nc_j is not None:
+                        new_slot_caches[str(j)] = nc_j
+                return h, new_slot_caches
+
+            body = jax.checkpoint(period_body) if remat else period_body
+            slot_caches = cache_i["slots"] if cache_i else None
+            x, ncs = jax.lax.scan(body, x, (sp["slots"], slot_caches))
+            new_caches.append({"slots": ncs})
+    return x, (new_caches if caches is not None else None)
+
+
+def encode(params: dict, cfg: ModelConfig, enc_embeds: jax.Array) -> jax.Array:
+    """Run the (bidirectional) encoder over stub modality embeddings."""
+    plan = build_stage_plan(cfg.enc_pattern, cfg.enc_layer_kinds)
+    pos = jnp.arange(enc_embeds.shape[1])
+    x, _ = _apply_stages(
+        params["encoder"]["stages"], plan, enc_embeds.astype(jnp.dtype(cfg.dtype)),
+        cfg, positions=pos, causal=False,
+    )
+    return rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array | None = None,  # (B, S) int32
+    embeds: jax.Array | None = None,  # (B, S, d) modality-stub inputs
+    *,
+    cache: list | None = None,
+    pos_offset: jax.Array | int = 0,
+    enc_out: jax.Array | None = None,
+    remat: bool = False,
+    last_only: bool = False,
+):
+    """Returns (logits (B,S,padded_vocab), new_cache). ``last_only`` computes
+    the LM head for the final position only (prefill: avoids a (B,S,V) buffer)."""
+    if embeds is None:
+        embeds = embed_lookup(params["embed"], tokens)
+    x = embeds.astype(jnp.dtype(cfg.dtype))
+    if enc_out is not None:
+        enc_out = enc_out.astype(jnp.dtype(cfg.dtype))
+    S = x.shape[1]
+    positions = pos_offset + jnp.arange(S)
+    plan = build_stage_plan(cfg.pattern, cfg.layer_kinds)
+    x, new_cache = _apply_stages(
+        params["stages"], plan, x, cfg, positions=positions, caches=cache,
+        enc_out=enc_out, causal=True, remat=remat,
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logits, new_cache
+
+
+def loss_fn(
+    params: dict, cfg: ModelConfig, tokens: jax.Array, labels: jax.Array,
+    embeds: jax.Array | None = None, enc_embeds: jax.Array | None = None,
+    remat: bool = True,
+) -> jax.Array:
+    enc_out = encode(params, cfg, enc_embeds) if enc_embeds is not None else None
+    logits, _ = forward(
+        params, cfg, tokens, embeds=embeds, enc_out=enc_out, remat=remat
+    )
+    return cross_entropy(logits, labels, cfg.final_softcap, valid_vocab=cfg.vocab)

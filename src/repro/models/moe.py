@@ -1,0 +1,89 @@
+"""Token-choice top-k MoE with capacity-bounded dispatch (EP-shardable).
+
+Dispatch strategy (DESIGN.md §7): flatten (token, expert-choice) pairs, rank
+each pair within its expert by a one-hot cumsum, drop beyond-capacity pairs,
+gather into a dense (E, C, d) buffer, run the expert FFNs as stacked einsums
+(sharded over the expert axis = expert parallelism), and combine with router
+gates. Active-FLOP accounting matches 6·N_active·D — no dense all-expert
+compute and no GShard-style quadratic dispatch einsum.
+
+Supports arctic's parallel *dense residual* MLP via ``moe_dense_ff``.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constraints import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.mlp import init_mlp, mlp
+
+
+def _decode_weight_stationary() -> bool:
+    """§Perf hillclimb 2 knob (default on; =0 reproduces the baseline)."""
+    return os.environ.get("REPRO_MOE_DECODE_WS", "1") == "1"
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),
+        "w1": dense_init(ks[1], d, f, dtype, (E, d, f)),
+        "w2": dense_init(ks[2], f, d, dtype, (E, f, d)),
+        "w3": dense_init(ks[3], d, f, dtype, (E, d, f)),
+    }
+    if cfg.moe_dense_ff:
+        p["dense"] = init_mlp(ks[4], d, cfg.moe_dense_ff, True, dtype)
+    return p
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    N = B * S
+    # Decode/small batches use no-drop capacity (exact routing); large token
+    # counts use the standard capacity factor with overflow dropping.
+    C = N * k if N * k <= 4096 else max(1, int(cfg.capacity_factor * N * k / E))
+    xt = constrain(x.reshape(N, d), "dp", None)
+
+    logits = xt.astype(jnp.float32) @ p["router"]  # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, choice = jax.lax.top_k(probs, k)  # (N, k)
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)  # renormalize over k
+
+    e_flat = choice.reshape(N * k)
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)  # (N*k, E)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1, e_flat[:, None], axis=1)[:, 0]
+    keep = pos < C
+    slot = e_flat * C + jnp.where(keep, pos, 0)
+
+    x_rep = constrain(jnp.repeat(xt, k, axis=0), "dp", None)  # (N*k, d) pairs
+    buf = jnp.zeros((E * C, d), x.dtype).at[slot].add(
+        jnp.where(keep[:, None], x_rep, 0)
+    )
+    # expert parallelism: the dispatch buffer lives expert-sharded (all-to-all
+    # happens at the scatter above / gather below)
+    h = constrain(buf.reshape(E, C, d), "model", None, None)
+    a = jnp.einsum("ecd,edf->ecf", h, p["w1"])
+    g = jnp.einsum("ecd,edf->ecf", h, p["w3"])
+    if N * k <= 4096 and _decode_weight_stationary():
+        # decode: keep expert weights fully sharded (E over model, f over the
+        # data axes) and compute with f-sharded intermediates — moving ~MBs of
+        # activations instead of all-gathering ~GBs of expert weights per
+        # token (§Perf hillclimb 2). The w2 contraction over sharded f yields
+        # a partial-sum all-reduce of the small (E,C,d) buffer.
+        a = constrain(a, "model", None, "dp")
+        g = constrain(g, "model", None, "dp")
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(a) * g, p["w2"])
+    y = constrain(y, "model", None, None)
+
+    out_pairs = y.reshape(E * C, d)[slot] * (keep * gate.reshape(N * k))[:, None]
+    out_pairs = constrain(out_pairs, "dp", None)
+    out = out_pairs.reshape(N, k, d).sum(axis=1).reshape(B, S, d)
+    if "dense" in p:  # arctic dense-residual path runs in parallel with experts
+        out = out + mlp(p["dense"], x, True)
+    return out.astype(x.dtype)

@@ -1,0 +1,239 @@
+"""Mamba1 (selective scan) and Mamba2 (SSD) blocks, TPU-adapted.
+
+Both use a **chunked** formulation (scan over chunks of ``cfg.ssm_chunk``
+tokens) so the (B, S, d_inner, N) state tensor is never materialized for the
+full sequence — per-chunk working sets fit VMEM/HBM budgets at 500k context.
+Mamba2 uses the SSD matmul form (intra-chunk attention-like GEMMs + inter-chunk
+state GEMMs), which maps the recurrence onto the MXU. Decode is a single-step
+state update (O(1) per token — the reason these archs run the ``long_500k``
+cell).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constraints import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rms_norm, uniform_init
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B,S,C), w: (K,C), b: (C,)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _conv_step(state: jax.Array, xt: jax.Array, w: jax.Array, b: jax.Array):
+    """Single-token conv. state: (B,K-1,C), xt: (B,1,C) -> (y, new_state)."""
+    window = jnp.concatenate([state, xt], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", window, w) + b
+    return y[:, None], window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba1
+# ---------------------------------------------------------------------------
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return -(-cfg.d_model // 16)
+
+
+def init_mamba1(key, cfg: ModelConfig, dtype) -> dict:
+    d, di, N, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.conv_kernel
+    R = _dt_rank(cfg)
+    ks = jax.random.split(key, 8)
+    # x/z projections kept separate (not fused) so each column-shards cleanly
+    return {
+        "x_in": dense_init(ks[0], d, di, dtype),
+        "z_proj": dense_init(ks[5], d, di, dtype),
+        "conv_w": uniform_init(ks[1], (K, di), K ** -0.5, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, R + 2 * N, dtype),
+        "dt_proj": dense_init(ks[3], R, di, dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.broadcast_to(
+            jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32)), (di, N)
+        ).astype(jnp.float32),
+        "Dskip": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _scan_combine(left, right):
+    a1, b1 = left
+    a2, b2 = right
+    return a1 * a2, b1 * a2 + b2
+
+
+def mamba1(p: dict, u: jax.Array, cfg: ModelConfig, cache: dict | None = None):
+    """u: (B,S,d). Returns (out, new_cache)."""
+    B, S, d = u.shape
+    di, N, K = cfg.d_inner, cfg.ssm_state, cfg.conv_kernel
+    R = _dt_rank(cfg)
+    bt, ct = ("dp", "model") if cfg.ssm_tp else ("dpm", None)
+    x = constrain(u @ p["x_in"], bt, None, ct)
+    z = constrain(u @ p["z_proj"], bt, None, ct)
+
+    if cache is not None and S == 1:
+        xc, conv_state = _conv_step(cache["conv"], x, p["conv_w"], p["conv_b"])
+    else:
+        xc = _causal_conv(x, p["conv_w"], p["conv_b"])
+        conv_state = x[:, -(K - 1):, :] if cache is not None else None
+    x = jax.nn.silu(xc)
+
+    dbc = x @ p["x_proj"]
+    dt = jax.nn.softplus(dbc[..., :R] @ p["dt_proj"] + p["dt_bias"]).astype(jnp.float32)
+    Bc = dbc[..., R : R + N].astype(jnp.float32)
+    Cc = dbc[..., R + N :].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])  # (di,N)
+    xf = x.astype(jnp.float32)
+
+    if cache is not None and S == 1:
+        h = cache["h"]  # (B,di,N)
+        da = jnp.exp(dt[:, 0, :, None] * A)
+        h = da * h + (dt * xf)[:, 0, :, None] * Bc[:, 0, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0])[:, None]
+        new_cache = {"conv": conv_state, "h": h}
+    else:
+        Q = min(cfg.ssm_chunk, S)
+        assert S % Q == 0, (S, Q)
+        nc = S // Q
+        da = jnp.exp(dt[..., None] * A).reshape(B, nc, Q, di, N)
+        db = ((dt * xf)[..., None] * Bc[:, :, None, :]).reshape(B, nc, Q, di, N)
+        Ccc = Cc.reshape(B, nc, Q, N)
+
+        def chunk_step(h, inputs):
+            da_c, db_c, C_c = inputs  # (B,Q,di,N),(B,Q,di,N),(B,Q,N)
+            da_c = constrain(da_c, bt, None, ct, None)
+            db_c = constrain(db_c, bt, None, ct, None)
+            cum_a, h_within = jax.lax.associative_scan(_scan_combine, (da_c, db_c), axis=1)
+            h_t = h_within + cum_a * h[:, None]
+            y_c = jnp.einsum("bqdn,bqn->bqd", h_t, C_c)
+            return h_t[:, -1], y_c
+
+        h0 = cache["h"] if cache is not None else jnp.zeros((B, di, N), jnp.float32)
+        hN, y = jax.lax.scan(
+            chunk_step, h0,
+            (da.transpose(1, 0, 2, 3, 4), db.transpose(1, 0, 2, 3, 4),
+             Ccc.transpose(1, 0, 2, 3)),
+        )
+        y = y.transpose(1, 0, 2, 3).reshape(B, S, di)
+        new_cache = {"conv": conv_state, "h": hN} if cache is not None else None
+
+    y = (y + xf * p["Dskip"].astype(jnp.float32)).astype(u.dtype)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype) -> dict:
+    d, di, N, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.conv_kernel
+    nh = di // cfg.mamba_headdim
+    ks = jax.random.split(key, 6)
+    # projections and convs kept separate (z / x / BC / dt): each piece
+    # column-shards cleanly instead of splitting a fused buffer mid-shard
+    return {
+        "z_proj": dense_init(ks[0], d, di, dtype),
+        "x_in": dense_init(ks[3], d, di, dtype),
+        "bc_proj": dense_init(ks[4], d, 2 * N, dtype),
+        "dtp": dense_init(ks[5], d, nh, dtype),
+        "conv_w": uniform_init(ks[1], (K, di), K ** -0.5, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "conv_bc_w": uniform_init(ks[1], (K, 2 * N), K ** -0.5, dtype),
+        "conv_bc_b": jnp.zeros((2 * N,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -4.6, jnp.float32),
+        "Dskip": jnp.ones((nh,), dtype),
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+    }
+
+
+def mamba2(p: dict, u: jax.Array, cfg: ModelConfig, cache: dict | None = None):
+    B, S, d = u.shape
+    di, N, K = cfg.d_inner, cfg.ssm_state, cfg.conv_kernel
+    hp = cfg.mamba_headdim
+    nh = di // hp
+    bt, ct = ("dp", "model") if cfg.ssm_tp else ("dpm", None)
+    z = constrain(u @ p["z_proj"], bt, None, ct)
+    xr = constrain(u @ p["x_in"], bt, None, ct)
+    bc = u @ p["bc_proj"]
+    dt = constrain(u @ p["dtp"], bt, None, ct)
+
+    if cache is not None and S == 1:
+        x, conv_state = _conv_step(cache["conv"], xr, p["conv_w"], p["conv_b"])
+        bc, conv_bc_state = _conv_step(cache["conv_bc"], bc, p["conv_bc_w"], p["conv_bc_b"])
+    else:
+        conv_state = xr[:, -(K - 1):, :] if cache is not None else None
+        conv_bc_state = bc[:, -(K - 1):, :] if cache is not None else None
+        x = _causal_conv(xr, p["conv_w"], p["conv_b"])
+        bc = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"])
+    x = jax.nn.silu(x)
+    bc = jax.nn.silu(bc)
+    Bc, Cc = jnp.split(bc, 2, axis=-1)
+    x = x.reshape(B, S, nh, hp).astype(jnp.float32)
+    x = constrain(x, bt, None, ct, None)
+    Bc, Cc = Bc.astype(jnp.float32), Cc.astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])  # (nh,)
+    la = dt * A  # (B,S,nh) log-decay per step (negative)
+    xdt = x * dt[..., None]  # (B,S,nh,hp)
+
+    if cache is not None and S == 1:
+        h = cache["h"]  # (B,nh,N,hp)
+        h = jnp.exp(la)[:, 0, :, None, None] * h + jnp.einsum(
+            "bn,bhp->bhnp", Bc[:, 0], xdt[:, 0]
+        )
+        y = jnp.einsum("bn,bhnp->bhp", Cc[:, 0], h)[:, None].reshape(B, 1, di)
+        new_cache = {"conv": conv_state, "conv_bc": conv_bc_state, "h": h}
+    else:
+        Q = min(cfg.ssm_chunk, S)
+        assert S % Q == 0, (S, Q)
+        nc = S // Q
+
+        def chunk_step(h, inputs):
+            la_c, x_c, B_c, C_c = inputs  # (B,Q,nh),(B,Q,nh,hp),(B,Q,N),(B,Q,N)
+            la_c = constrain(la_c, bt, None, ct)
+            x_c = constrain(x_c, bt, None, ct, None)
+            cum = jnp.cumsum(la_c, axis=1)  # (B,Q,nh)
+            # intra-chunk: attention-like masked decay matmul (MXU)
+            M = jnp.einsum("bqn,bpn->bqp", C_c, B_c)  # (B,Q,Q)
+            L = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,q,p,nh)
+            tri = jnp.tril(jnp.ones((Q, Q), bool))
+            W = jnp.where(tri[None, :, :, None], M[..., None] * L, 0.0)
+            y_intra = jnp.einsum("bqph,bphd->bqhd", W, x_c)
+            # inter-chunk: contribution of the carried state
+            y_inter = jnp.einsum("bqn,bhnd->bqhd", C_c, h) * jnp.exp(cum)[..., None]
+            # new carried state
+            decay_tail = jnp.exp(cum[:, -1:, :] - cum)  # (B,Q,nh)
+            h_new = jnp.exp(cum[:, -1])[:, :, None, None] * h + jnp.einsum(
+                "bpn,bphd->bhnd", B_c, x_c * decay_tail[..., None]
+            )
+            return h_new, y_intra + y_inter
+
+        h0 = (
+            cache["h"] if cache is not None
+            else jnp.zeros((B, nh, N, hp), jnp.float32)
+        )
+        to_chunks = lambda t: t.reshape((B, nc, Q) + t.shape[2:]).swapaxes(0, 1)
+        hN, y = jax.lax.scan(
+            chunk_step, h0, (to_chunks(la), to_chunks(xdt), to_chunks(Bc), to_chunks(Cc))
+        )
+        y = y.swapaxes(0, 1).reshape(B, S, nh, hp).reshape(B, S, di)
+        new_cache = (
+            {"conv": conv_state, "conv_bc": conv_bc_state, "h": hN}
+            if cache is not None else None
+        )
+
+    y = y + (x * p["Dskip"].astype(jnp.float32)[None, None, :, None]).reshape(B, S, di)
+    y = rms_norm((y.astype(u.dtype) * jax.nn.silu(z)), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, new_cache

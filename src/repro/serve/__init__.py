@@ -1,0 +1,1 @@
+from repro.serve.engine import make_decode_step, make_prefill_step

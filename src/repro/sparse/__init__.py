@@ -1,0 +1,2 @@
+from repro.sparse.matrix import CSC, CSR, csc_to_csr, csr_to_csc, lower_triangular_from_coo
+from repro.sparse import suite

@@ -1,0 +1,2 @@
+from repro.train.optim import adamw_init, adamw_update, cosine_schedule
+from repro.train.step import make_train_step

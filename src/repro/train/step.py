@@ -1,0 +1,122 @@
+"""Sharded train step: loss → grad → AdamW, with remat + microbatch accumulation.
+
+`make_train_step` returns a jitted function with explicit in/out shardings
+(params/opt-state by the rule engine, batch over the DP axes), donated
+params/opt-state buffers, and optional gradient accumulation over
+microbatches (`lax.scan`, f32 accumulators). Gradient compression knob
+(`grad_allreduce_dtype="bfloat16"`) casts grads before the DP all-reduce —
+XLA then reduces in bf16, halving the dominant collective payload (a
+beyond-paper optimization evaluated in §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.meshutil import dp_axes as _dp_axes
+from repro.distributed.sharding import batch_specs, param_specs
+from repro.models.config import ModelConfig
+from repro.models.model import loss_fn
+from repro.train.optim import adamw_update, cosine_schedule
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    mesh: jax.sharding.Mesh,
+    *,
+    microbatches: int = 1,
+    peak_lr: float = 3e-4,
+    warmup: int = 100,
+    total_steps: int = 10000,
+    remat: bool = True,
+    fsdp: bool = False,
+    grad_allreduce_dtype: str | None = None,
+    example_params=None,
+    example_opt=None,
+    example_batch=None,
+    donate: bool = True,
+):
+    dp = _dp_axes(mesh)
+    fsdp_axes = dp if fsdp else ()
+
+    def step_fn(params, opt_state, batch, step):
+        def loss_of(p, b):
+            return loss_fn(
+                p, cfg, b.get("tokens"), b.get("labels"),
+                embeds=b.get("embeds"), enc_embeds=b.get("enc_embeds"),
+                remat=remat,
+            )
+
+        if microbatches > 1:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            # accumulate in the gradient's own dtype (bf16 for bf16 params):
+            # an f32 accumulator would add a full param-sized f32 buffer on top
+            # of params+opt — the difference between fitting HBM or not for
+            # the 400B MoE cells (EXPERIMENTS.md §Dry-run)
+            def acc_step(carry, b):
+                loss, grads = jax.value_and_grad(loss_of)(params, b)
+                acc_l, acc_g = carry
+                acc_g = jax.tree.map(
+                    lambda a, g: a + (g / microbatches).astype(a.dtype), acc_g, grads
+                )
+                return (acc_l + loss / microbatches, acc_g), None
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+            (loss, grads), _ = jax.lax.scan(acc_step, (jnp.zeros(()), zero_g), mb)
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+
+        if grad_allreduce_dtype:  # gradient compression for the DP all-reduce
+            grads = jax.tree.map(
+                lambda g: g.astype(jnp.dtype(grad_allreduce_dtype)), grads
+            )
+        lr = cosine_schedule(step, peak_lr=peak_lr, warmup=warmup, total=total_steps)
+        params, opt_state, gnorm = adamw_update(params, grads, opt_state, lr=lr)
+        metrics = {"loss": loss, "gnorm": gnorm, "lr": lr}
+        return params, opt_state, metrics
+
+    if example_params is None:
+        return step_fn  # un-jitted (tests drive their own jit)
+
+    from repro.distributed.sharding import SSM_WEIGHT_NAMES
+
+    no_tp = SSM_WEIGHT_NAMES if not cfg.ssm_tp else frozenset()
+    pspecs = param_specs(example_params, mesh, fsdp_axes=fsdp_axes,
+                         no_tp_names=no_tp)
+    ospecs = {
+        "m": param_specs(example_opt["m"], mesh, fsdp_axes=fsdp_axes,
+                         no_tp_names=no_tp),
+        "v": param_specs(example_opt["v"], mesh, fsdp_axes=fsdp_axes,
+                         no_tp_names=no_tp),
+        "step": P(),
+    }
+    bspecs = batch_specs(example_batch, mesh, dp_axes=dp)
+    shard = lambda spec: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    psh, osh, bsh = shard(pspecs), shard(ospecs), shard(bspecs)
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(psh, osh, bsh, NamedSharding(mesh, P())),
+        out_shardings=(psh, osh, shard({
+            "loss": P(), "gnorm": P(), "lr": P()})),
+        donate_argnums=(0, 1) if donate else (),
+    )
+
+    def stepper(params, opt_state, batch, step):
+        # place inputs onto the production sharding (no-op once they are);
+        # fresh host arrays / restored checkpoints reshard here
+        params = jax.device_put(params, psh)
+        opt_state = jax.device_put(opt_state, osh)
+        batch = jax.device_put(batch, bsh)
+        return jitted(params, opt_state, batch, step)
+
+    return stepper

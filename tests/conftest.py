@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Tests run with the default single CPU device (the dry-run sets its own
+# device count in a separate process). Keep kernels on the fast XLA reference
+# path by default; kernel tests opt into pallas interpret mode explicitly.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

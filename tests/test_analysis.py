@@ -1,0 +1,48 @@
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.analysis import in_degrees, level_sets, metrics
+from repro.sparse.matrix import lower_triangular_from_coo
+
+
+@st.composite
+def csr_matrices(draw):
+    n = draw(st.integers(8, 80))
+    m = draw(st.integers(0, 4 * n))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    return lower_triangular_from_coo(
+        n, rng.integers(0, n, m), rng.integers(0, n, m), rng=rng
+    )
+
+
+@given(csr_matrices())
+@settings(max_examples=40, deadline=None)
+def test_level_schedule_is_valid_topological_order(a):
+    """Every row's strictly-lower parents must sit in strictly earlier levels."""
+    sched = level_sets(a)
+    lvl = sched.level_of
+    for i in range(a.n):
+        for j in a.col_idx[a.row_ptr[i]:a.row_ptr[i + 1] - 1]:
+            assert lvl[j] < lvl[i]
+    # levels are tight: each row > level 0 has a parent exactly one level down
+    for i in range(a.n):
+        if lvl[i] > 0:
+            parents = a.col_idx[a.row_ptr[i]:a.row_ptr[i + 1] - 1]
+            assert (lvl[parents] == lvl[i] - 1).any()
+
+
+@given(csr_matrices())
+@settings(max_examples=40, deadline=None)
+def test_in_degrees_match_structure(a):
+    deg = in_degrees(a)
+    assert np.array_equal(deg, np.diff(a.row_ptr) - 1)
+    assert (deg >= 0).all()
+
+
+def test_metrics_match_paper_definitions():
+    rng = np.random.default_rng(0)
+    a = lower_triangular_from_coo(64, rng.integers(0, 64, 128), rng.integers(0, 64, 128))
+    m = metrics(a)
+    assert m.dependency == a.nnz / a.n
+    assert m.parallelism == a.n / m.n_levels

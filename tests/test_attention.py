@@ -1,0 +1,68 @@
+"""Flash attention vs einsum reference: causal, sliding window, softcap, GQA."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models.attention import _flash, _repeat_kv
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _ref(q, k, v, *, causal, window, cap, hd):
+    scores = jnp.einsum("bshd,bthd->bhst", q, k) * hd ** -0.5
+    if cap:
+        scores = jnp.tanh(scores / cap) * cap
+    S, T = q.shape[1], k.shape[1]
+    pos_q, pos_k = jnp.arange(S), jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask = pos_k[None] <= pos_q[:, None]
+    if window:
+        mask &= pos_k[None] > pos_q[:, None] - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    return jnp.einsum("bhst,bthd->bshd", jax.nn.softmax(scores, -1), v)
+
+
+@pytest.mark.parametrize("window", [0, 700])
+@pytest.mark.parametrize("cap", [0.0, 30.0])
+@pytest.mark.parametrize("differentiable", [False, True])
+def test_flash_matches_reference(window, cap, differentiable):
+    cfg = dataclasses.replace(get_reduced("gemma2-2b"), softcap=cap)
+    B, S, H, hd = 2, 2048, 4, 16
+    q = jax.random.normal(KEY, (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, hd))
+    out = _flash(q, k, v, cfg, causal=True, window=window, chunk=512,
+                 differentiable=differentiable)
+    ref = _ref(q, k, v, causal=True, window=window, cap=cap, hd=hd)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_gradients_match_reference():
+    cfg = get_reduced("llama3.2-1b")
+    B, S, H, hd = 1, 2048, 2, 16
+    q = jax.random.normal(KEY, (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, hd))
+
+    def f_flash(q):
+        return jnp.sum(_flash(q, k, v, cfg, causal=True, window=0, chunk=512,
+                              differentiable=True) ** 2)
+
+    def f_ref(q):
+        return jnp.sum(_ref(q, k, v, causal=True, window=0, cap=0, hd=hd) ** 2)
+
+    g1, g2 = jax.grad(f_flash)(q), jax.grad(f_ref)(q)
+    np.testing.assert_allclose(g1, g2, rtol=5e-4, atol=5e-4)
+
+
+def test_repeat_kv_expands_heads():
+    k = jax.random.normal(KEY, (2, 8, 3, 4))
+    kr = _repeat_kv(k, 2)
+    assert kr.shape == (2, 8, 6, 4)
+    np.testing.assert_array_equal(kr[:, :, 0], kr[:, :, 1])
+    np.testing.assert_array_equal(kr[:, :, 2], kr[:, :, 3])

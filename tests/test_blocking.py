@@ -1,0 +1,54 @@
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.blocking import build_blocks, pad_rhs, unpad_x
+from repro.sparse.matrix import lower_triangular_from_coo, to_scipy
+
+
+def _dense_from_blocks(bs):
+    n_pad = bs.nb * bs.B
+    dense = np.zeros((n_pad, n_pad), np.float64)
+    for bi in range(bs.nb):
+        dense[bi * bs.B:(bi + 1) * bs.B, bi * bs.B:(bi + 1) * bs.B] = bs.diag[bi]
+    for t in range(bs.n_tiles):
+        r, c = bs.off_rows[t], bs.off_cols[t]
+        dense[r * bs.B:(r + 1) * bs.B, c * bs.B:(c + 1) * bs.B] = bs.off_tiles[t]
+    return dense
+
+
+@given(st.integers(8, 70), st.integers(2, 16), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_block_reconstruction(n, B, seed):
+    rng = np.random.default_rng(seed)
+    m = 4 * n
+    a = lower_triangular_from_coo(n, rng.integers(0, n, m), rng.integers(0, n, m), rng=rng)
+    bs = build_blocks(a, B)
+    dense = _dense_from_blocks(bs)
+    ref = to_scipy(a).toarray()
+    np.testing.assert_allclose(dense[: a.n, : a.n], ref, rtol=1e-6, atol=1e-6)
+    # padding rows are identity (inert under solve)
+    for i in range(a.n, bs.nb * bs.B):
+        assert dense[i, i] == 1.0
+        assert np.count_nonzero(dense[i, :]) == 1
+
+
+@given(st.integers(8, 70), st.integers(2, 16), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_block_levels_valid(n, B, seed):
+    rng = np.random.default_rng(seed)
+    a = lower_triangular_from_coo(
+        n, rng.integers(0, n, 3 * n), rng.integers(0, n, 3 * n), rng=rng
+    )
+    bs = build_blocks(a, B)
+    lvl = bs.block_level
+    for t in range(bs.n_tiles):
+        assert lvl[bs.off_cols[t]] < lvl[bs.off_rows[t]]
+    assert np.array_equal(bs.block_indeg, np.bincount(bs.off_rows, minlength=bs.nb))
+
+
+def test_pad_roundtrip():
+    rng = np.random.default_rng(0)
+    a = lower_triangular_from_coo(37, rng.integers(0, 37, 60), rng.integers(0, 37, 60))
+    bs = build_blocks(a, 8)
+    b = rng.uniform(-1, 1, 37)
+    np.testing.assert_allclose(unpad_x(pad_rhs(b, bs), bs), b.astype(np.float32), rtol=1e-6)

@@ -1,0 +1,37 @@
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.data import SyntheticLM
+
+
+def test_batches_are_deterministic_and_step_dependent():
+    cfg = get_reduced("llama3.2-1b")
+    d = SyntheticLM(cfg, global_batch=4, seq_len=16, seed=1)
+    a, b = d.batch(3), d.batch(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert not np.array_equal(d.batch(3)["tokens"], d.batch(4)["tokens"])
+
+
+def test_host_sharding_partitions_global_batch():
+    cfg = get_reduced("llama3.2-1b")
+    d = SyntheticLM(cfg, global_batch=8, seq_len=8)
+    full = d.batch(0)["tokens"]
+    parts = [d.batch(0, host_index=i, host_count=4)["tokens"] for i in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+def test_labels_are_shifted_tokens():
+    cfg = get_reduced("llama3.2-1b")
+    b = SyntheticLM(cfg, 2, 16).batch(0)
+    assert b["tokens"].shape == b["labels"].shape == (2, 16)
+    # tokens/labels come from one (B, S+1) draw: label[t] == token[t+1]
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_modality_stub_batches():
+    cfg = get_reduced("internvl2-1b")
+    b = SyntheticLM(cfg, 2, 16).batch(0)
+    assert "embeds" in b and b["embeds"].shape == (2, 16, cfg.d_model)
+    cfg = get_reduced("seamless-m4t-medium")
+    b = SyntheticLM(cfg, 2, 16).batch(0)
+    assert b["enc_embeds"].shape == (2, cfg.enc_seq, cfg.d_model)

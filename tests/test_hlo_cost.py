@@ -1,0 +1,65 @@
+"""Loop-aware HLO cost analyzer: exactness on known loop structures."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_cost import analyze
+
+A = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+MM = 2 * 128**3  # flops of one 128^3 matmul
+
+
+def _flops(fn, *args):
+    c = jax.jit(fn).lower(*args).compile()
+    return analyze(c.as_text())["flops"]
+
+
+@pytest.mark.parametrize("n", [1, 4, 16])
+def test_scan_trip_count_multiplied(n):
+    def f(x):
+        y, _ = jax.lax.scan(lambda c, _: (c @ c, None), x, None, length=n)
+        return y
+
+    assert abs(_flops(f, A) / (n * MM) - 1) < 0.01
+
+
+def test_nested_scans():
+    def f(x):
+        def outer(c, _):
+            c2, _ = jax.lax.scan(lambda ci, _: (ci @ ci, None), c, None, length=3)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    assert abs(_flops(f, A) / (15 * MM) - 1) < 0.01
+
+
+def test_remat_grad_counts_recompute():
+    """fwd(6) + remat recompute(6) + bwd dgemm(2x6) = 24 matmul equivalents."""
+    def train(x):
+        def loss(w):
+            y, _ = jax.lax.scan(
+                jax.checkpoint(lambda c, _: (jnp.tanh(c @ w), None)),
+                x, None, length=6)
+            return jnp.sum(y)
+        return jax.grad(loss)(jnp.eye(128))
+
+    assert abs(_flops(train, A) / (24 * MM) - 1) < 0.01
+
+
+def test_collectives_in_loops():
+    mesh = jax.make_mesh((1,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+
+    def h(x):
+        y, _ = jax.lax.scan(lambda c, _: (jax.lax.psum(c, "x"), None),
+                            x, None, length=7)
+        return y
+
+    hs = jax.jit(jax.shard_map(h, mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
+                               out_specs=jax.sharding.PartitionSpec(),
+                               check_vma=False))
+    c = hs.lower(jax.ShapeDtypeStruct((128,), jnp.float32)).compile()
+    r = analyze(c.as_text())
+    assert r["collective_bytes"]["all-reduce"] == 7 * 128 * 4

@@ -1,0 +1,60 @@
+"""Per-kernel allclose vs the pure-jnp oracles, interpret mode, shape/dtype sweep."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.block_spmv import block_gemv, block_gemv_grouped
+from repro.kernels.block_trsv import block_trsv
+
+
+def _tri(k, B, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    L = np.tril(rng.uniform(-1, 1, (k, B, B))).astype(dtype)
+    L[:, np.arange(B), np.arange(B)] = 2.0 + rng.uniform(0, 1, (k, B))
+    r = rng.uniform(-1, 1, (k, B)).astype(dtype)
+    return jnp.asarray(L), jnp.asarray(r)
+
+
+@pytest.mark.parametrize("B", [8, 16, 32, 64])
+@pytest.mark.parametrize("k", [1, 3, 17])
+def test_trsv_rowsweep_matches_oracle(B, k):
+    L, r = _tri(k, B, np.float32, seed=B * 100 + k)
+    out = block_trsv(L, r, algorithm="rowsweep", interpret=True)
+    np.testing.assert_allclose(out, ref.block_trsv_ref(L, r), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,panel", [(16, 8), (32, 8), (64, 16)])
+def test_trsv_panel_matches_oracle(B, panel):
+    L, r = _tri(5, B, np.float32, seed=B)
+    out = block_trsv(L, r, algorithm="panel", panel=panel, interpret=True)
+    np.testing.assert_allclose(out, ref.block_trsv_ref(L, r), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [np.float32])
+@pytest.mark.parametrize("B", [8, 32, 128])
+@pytest.mark.parametrize("m", [1, 5, 13])
+def test_gemv_matches_oracle(B, m, dtype):
+    rng = np.random.default_rng(B + m)
+    T = jnp.asarray(rng.uniform(-1, 1, (m, B, B)).astype(dtype))
+    x = jnp.asarray(rng.uniform(-1, 1, (m, B)).astype(dtype))
+    out = block_gemv(T, x, interpret=True)
+    np.testing.assert_allclose(out, ref.block_gemv_ref(T, x), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("group", [2, 4, 8])
+def test_gemv_grouped_matches_oracle(group):
+    rng = np.random.default_rng(group)
+    m, B = 11, 16  # deliberately not a multiple of group (exercises padding)
+    T = jnp.asarray(rng.uniform(-1, 1, (m, B, B)).astype(np.float32))
+    x = jnp.asarray(rng.uniform(-1, 1, (m, B)).astype(np.float32))
+    out = block_gemv_grouped(T, x, group=group, interpret=True)
+    np.testing.assert_allclose(out, ref.block_gemv_ref(T, x), rtol=2e-5, atol=2e-5)
+
+
+def test_trsv_solves_the_system():
+    L, r = _tri(4, 32, np.float32)
+    x = block_trsv(L, r, interpret=True)
+    np.testing.assert_allclose(
+        jnp.einsum("kij,kj->ki", L, x), r, rtol=1e-4, atol=1e-4
+    )

@@ -1,0 +1,100 @@
+"""Multi-device behaviour (subprocess with 8 forced host CPU devices).
+
+The main test process keeps 1 device (dry-run contract); anything needing a
+real multi-device mesh runs here via subprocess.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_py(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=1200, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_solver_all_modes_on_8_devices():
+    print(run_py("""
+        import numpy as np, jax
+        from repro.sparse import suite
+        from repro.sparse.matrix import reference_solve
+        from repro.core import sptrsv, SolverConfig
+        a = suite.random_levelled(600, 24, 4.0, seed=5)
+        b = np.random.default_rng(1).uniform(-1, 1, a.n)
+        x_ref = reference_solve(a, b)
+        mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+        for comm in ["zerocopy", "unified"]:
+            for sched in ["levelset", "syncfree"]:
+                for part in ["taskpool", "contiguous"]:
+                    cfg = SolverConfig(block_size=16, comm=comm, sched=sched, partition=part)
+                    x = sptrsv(a, b, mesh=mesh, config=cfg)
+                    err = np.abs(x - x_ref).max() / np.abs(x_ref).max()
+                    assert err < 1e-5, (comm, sched, part, err)
+        print("OK")
+    """))
+
+
+@pytest.mark.slow
+def test_lm_train_step_on_4_device_mesh():
+    print(run_py("""
+        import jax, numpy as np
+        from repro.configs import get_reduced
+        from repro.data import SyntheticLM
+        from repro.models import init_params
+        from repro.train.optim import adamw_init
+        from repro.train.step import make_train_step
+        mesh = jax.make_mesh((2, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        with jax.set_mesh(mesh):
+            cfg = get_reduced("llama3.2-1b")
+            params = init_params(cfg, jax.random.PRNGKey(0))
+            opt = adamw_init(params)
+            data = SyntheticLM(cfg, 4, 32)
+            step = make_train_step(cfg, mesh, example_params=params,
+                                   example_opt=opt, example_batch=data.batch(0))
+            losses = []
+            for s in range(3):
+                params, opt, m = step(params, opt, data.batch(s), np.int32(s))
+                losses.append(float(m["loss"]))
+            assert all(np.isfinite(l) for l in losses), losses
+        print("OK")
+    """, devices=4))
+
+
+@pytest.mark.slow
+def test_serve_decode_on_4_device_mesh():
+    print(run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_reduced
+        from repro.models import init_cache, init_params
+        from repro.serve.engine import make_decode_step, make_prefill_step
+        mesh = jax.make_mesh((2, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        with jax.set_mesh(mesh):
+            cfg = get_reduced("llama3.2-1b")
+            params = init_params(cfg, jax.random.PRNGKey(0))
+            B, S = 4, 32
+            cache = init_cache(cfg, B, S + 8)  # prefill-into-larger-cache path
+            batch = {"tokens": jnp.zeros((B, S), jnp.int32)}
+            prefill = make_prefill_step(cfg, mesh, example_params=params,
+                                        example_cache=cache, example_batch=batch)
+            logits, cache = prefill(params, batch, cache)
+            dec_batch = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+            decode = make_decode_step(cfg, mesh, example_params=params,
+                                      example_cache=cache, example_batch=dec_batch)
+            for t in range(3):
+                tok, cache = decode(params, dec_batch, cache, jnp.int32(S + t))
+            assert tok.shape == (B,)
+        print("OK")
+    """, devices=4))

@@ -1,0 +1,58 @@
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.blocking import build_blocks
+from repro.core.partition import cut_stats, make_partition
+from repro.sparse.matrix import lower_triangular_from_coo
+
+
+def _blocks(n=200, B=8, seed=0, m=600):
+    rng = np.random.default_rng(seed)
+    a = lower_triangular_from_coo(n, rng.integers(0, n, m), rng.integers(0, n, m), rng=rng)
+    return build_blocks(a, B)
+
+
+@given(st.integers(1, 8), st.integers(1, 16), st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_taskpool_round_robin_properties(D, tpd, seed):
+    bs = _blocks(seed=seed)
+    part = make_partition(bs, D, "taskpool", tpd)
+    assert part.owner.shape == (bs.nb,)
+    assert part.owner.min() >= 0 and part.owner.max() < D
+    # round-robin deal: consecutive tasks go to consecutive devices
+    n_tasks = D * tpd
+    task_size = max(1, -(-bs.nb // n_tasks))
+    task_of = np.arange(bs.nb) // task_size
+    assert np.array_equal(part.owner, task_of % D)
+    # every device owns a non-empty share when there are enough tasks
+    if bs.nb >= D * task_size:
+        assert len(np.unique(part.owner)) == D
+
+
+def test_contiguous_is_unidirectional():
+    """Paper §V: with contiguous partitioning, updates only flow low->high device."""
+    bs = _blocks()
+    part = make_partition(bs, 4, "contiguous")
+    src_dev = part.owner[bs.off_cols]
+    dst_dev = part.owner[bs.off_rows]
+    assert (dst_dev >= src_dev).all()
+
+
+def test_boundary_definition():
+    bs = _blocks()
+    part = make_partition(bs, 4, "taskpool", 4)
+    remote = part.owner[bs.off_cols] != part.owner[bs.off_rows]
+    expect = np.zeros(bs.nb, bool)
+    expect[bs.off_rows[remote]] = True
+    assert np.array_equal(part.boundary, expect)
+
+
+def test_taskpool_improves_level_balance_on_wide_matrix():
+    """The paper's Fig 7 mechanism: round-robin balances per-level row counts."""
+    from repro.sparse.suite import random_levelled
+
+    a = random_levelled(1500, 8, 3.0, seed=2)
+    bs = build_blocks(a, 4)
+    tp = cut_stats(bs, make_partition(bs, 4, "taskpool", 8))
+    ct = cut_stats(bs, make_partition(bs, 4, "contiguous"))
+    assert tp.level_imbalance <= ct.level_imbalance + 1e-9

@@ -1,0 +1,96 @@
+"""Sharding rule engine: every spec must divide its dim on the production mesh."""
+import functools
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.distributed.sharding import batch_specs, cache_specs, param_specs
+from repro.models import init_cache, init_params
+
+
+class FakeMesh:
+    """Shape-only stand-in so spec tests don't need 256 devices."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESHES = {
+    "single": FakeMesh({"data": 16, "model": 16}),
+    "multi": FakeMesh({"pod": 2, "data": 16, "model": 16}),
+}
+
+
+def _axis_size(mesh, axes):
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _assert_divisible(tree, spec_tree, mesh, what):
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    specs = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(specs)
+    for (path, leaf), spec in zip(leaves, specs):
+        for dim, axes in enumerate(spec):
+            if axes is None:
+                continue
+            size = _axis_size(mesh, axes)
+            assert leaf.shape[dim] % size == 0, (
+                what, jax.tree_util.keystr(path), leaf.shape, dim, spec)
+
+
+@pytest.mark.parametrize("mesh_kind", ["single", "multi"])
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_divide(arch, mesh_kind):
+    cfg = get_config(arch)
+    mesh = MESHES[mesh_kind]
+    params = jax.eval_shape(functools.partial(init_params, cfg), jax.random.key(0))
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    specs = param_specs(params, mesh, fsdp_axes=dp)
+    _assert_divisible(params, specs, mesh, f"{arch} params")
+    # at least the big 2D+ leaves must actually be sharded on some axis
+    big = [
+        (p, s) for (p, l), s in zip(
+            jax.tree_util.tree_leaves_with_path(params),
+            jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)))
+        if np.prod(l.shape) >= (1 << 24)
+        for p, s in [(jax.tree_util.keystr(p), s)]
+    ]
+    for pth, s in big:
+        assert any(a is not None for a in s), (arch, pth)
+
+
+@pytest.mark.parametrize("arch", ["zamba2-7b", "llama4-maverick-400b-a17b",
+                                  "falcon-mamba-7b", "seamless-m4t-medium"])
+def test_cache_specs_divide(arch):
+    cfg = get_config(arch)
+    mesh = MESHES["single"]
+    for shape in ("decode_32k", "long_500k"):
+        cell = SHAPES[shape]
+        if shape == "long_500k" and not cfg.subquadratic:
+            continue
+        cache = jax.eval_shape(
+            functools.partial(init_cache, cfg, cell.global_batch, cell.seq_len))
+        specs = cache_specs(cache, mesh, dp_axes=("data",))
+        _assert_divisible(cache, specs, mesh, f"{arch} cache {shape}")
+
+
+def test_batch_specs_divide_and_fallback():
+    mesh = MESHES["multi"]
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((256, 4096), np.int32),
+        "odd": jax.ShapeDtypeStruct((7, 3), np.float32),
+    }
+    specs = batch_specs(batch, mesh, dp_axes=("pod", "data"))
+    assert specs["tokens"] == P(("pod", "data"), None)
+    assert specs["odd"] == P(None, None)

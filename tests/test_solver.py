@@ -1,0 +1,83 @@
+"""SpTRSV end-to-end vs scipy oracle — all scheduling/comm/partition modes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DistributedSolver, SolverConfig, build_plan, solve_local, sptrsv
+from repro.core.blocking import pad_rhs, unpad_x
+from repro.sparse import suite
+from repro.sparse.matrix import reference_solve
+
+
+def _mesh1():
+    return jax.make_mesh((1,), ("x",), devices=jax.devices()[:1],
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+MATRICES = {
+    "levelled": lambda: suite.random_levelled(400, 24, 4.0, seed=3),
+    "chain": lambda: suite.chain(150),
+    "grid": lambda: suite.grid2d_factor(18, seed=1),
+    "parallel": lambda: suite.block_diagonal_parallel(300, 12, 3.0, seed=2),
+    "two_level": lambda: suite.random_levelled(300, 2, 8.0, seed=4),
+}
+
+
+@pytest.fixture(scope="module", params=list(MATRICES))
+def problem(request):
+    a = MATRICES[request.param]()
+    b = np.random.default_rng(0).uniform(-1, 1, a.n)
+    return a, b, reference_solve(a, b)
+
+
+@pytest.mark.parametrize("comm", ["zerocopy", "unified"])
+@pytest.mark.parametrize("sched", ["levelset", "syncfree"])
+def test_all_modes_match_reference(problem, comm, sched):
+    a, b, x_ref = problem
+    cfg = SolverConfig(block_size=16, comm=comm, sched=sched)
+    x = sptrsv(a, b, mesh=_mesh1(), config=cfg)
+    np.testing.assert_allclose(x, x_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_solve_local_matches_reference(problem):
+    a, b, x_ref = problem
+    plan = build_plan(a, 1, SolverConfig(block_size=8))
+    xb = solve_local(plan, jnp.asarray(pad_rhs(b, plan.bs)))
+    np.testing.assert_allclose(unpad_x(np.asarray(xb), plan.bs), x_ref, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("block_size", [4, 16, 64])
+def test_block_size_invariance(block_size):
+    a = MATRICES["levelled"]()
+    b = np.random.default_rng(1).uniform(-1, 1, a.n)
+    x = sptrsv(a, b, mesh=_mesh1(), config=SolverConfig(block_size=block_size))
+    np.testing.assert_allclose(x, reference_solve(a, b), rtol=2e-4, atol=2e-4)
+
+
+def test_solver_reuse_multiple_rhs():
+    """Paper runs the solver 100x per matrix: plan/compile once, solve many."""
+    a = MATRICES["grid"]()
+    plan = build_plan(a, 1, SolverConfig(block_size=16))
+    solver = DistributedSolver(plan, _mesh1())
+    rng = np.random.default_rng(2)
+    for _ in range(3):
+        b = rng.uniform(-1, 1, a.n)
+        np.testing.assert_allclose(solver.solve(b), reference_solve(a, b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_pallas_backend_end_to_end():
+    """Whole solve with the Pallas kernels (interpret mode) instead of XLA ref."""
+    a = suite.random_levelled(120, 10, 3.0, seed=5)
+    b = np.random.default_rng(3).uniform(-1, 1, a.n)
+    cfg = SolverConfig(block_size=16, kernel_backend="pallas")
+    x = sptrsv(a, b, mesh=_mesh1(), config=cfg)
+    np.testing.assert_allclose(x, reference_solve(a, b), rtol=2e-4, atol=2e-4)
+
+
+def test_comm_bytes_accounting():
+    a = MATRICES["levelled"]()
+    zc = build_plan(a, 4, SolverConfig(block_size=16, comm="zerocopy"))
+    un = build_plan(a, 4, SolverConfig(block_size=16, comm="unified"))
+    assert zc.comm_bytes_per_solve < un.comm_bytes_per_solve

@@ -1,0 +1,61 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse import suite
+from repro.sparse.matrix import (
+    CSR, csc_to_csr, csr_to_csc, lower_triangular_from_coo, reference_solve, to_scipy,
+)
+
+
+def random_csr(n=64, avg=3.0, seed=0) -> CSR:
+    rng = np.random.default_rng(seed)
+    m = int(avg * n)
+    return lower_triangular_from_coo(
+        n, rng.integers(0, n, m), rng.integers(0, n, m), rng=rng
+    )
+
+
+def test_structure_invariants():
+    a = random_csr(100, 4.0)
+    assert a.row_ptr[0] == 0 and a.row_ptr[-1] == a.nnz
+    # full diagonal, strictly lower otherwise
+    for i in range(a.n):
+        cols = a.col_idx[a.row_ptr[i]:a.row_ptr[i + 1]]
+        assert cols[-1] == i  # diagonal last
+        assert np.all(cols[:-1] < i)
+        assert np.all(np.diff(cols) > 0)
+
+
+def test_csc_csr_roundtrip():
+    a = random_csr(80, 5.0, seed=3)
+    csc = csr_to_csc(a)
+    csc.validate()
+    b = csc_to_csr(csc)
+    assert np.array_equal(a.row_ptr, b.row_ptr)
+    assert np.array_equal(a.col_idx, b.col_idx)
+    np.testing.assert_allclose(a.val, b.val)
+
+
+def test_reference_solve_is_triangular_solution():
+    a = random_csr(60, 4.0, seed=1)
+    b = np.random.default_rng(0).uniform(-1, 1, a.n)
+    x = reference_solve(a, b)
+    np.testing.assert_allclose(to_scipy(a) @ x, b, rtol=1e-9, atol=1e-9)
+
+
+@given(st.integers(16, 96), st.integers(1, 12), st.floats(1.5, 6.0))
+@settings(max_examples=20, deadline=None)
+def test_random_levelled_hits_level_target(n, levels, avg):
+    from repro.core.analysis import level_sets
+
+    a = suite.random_levelled(n, levels, avg, seed=7)
+    sched = level_sets(a)
+    assert sched.n_levels == min(levels, n)
+
+
+def test_suite_signatures():
+    for e in suite.table1_suite(scale=0.05):
+        a = e.build()
+        assert a.n >= 64
+        assert a.nnz >= a.n  # diagonal present

@@ -1,0 +1,67 @@
+"""SSM invariants: chunked scan == one-chunk scan; decode == prefill."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models.ssm import init_mamba1, init_mamba2, mamba1, mamba2
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(arch, chunk):
+    return dataclasses.replace(
+        get_reduced(arch), dtype="float32", param_dtype="float32", ssm_chunk=chunk
+    )
+
+
+@pytest.mark.parametrize("arch,init,fn", [
+    ("falcon-mamba-7b", init_mamba1, mamba1),
+    ("zamba2-7b", init_mamba2, mamba2),
+])
+def test_chunked_equals_monolithic(arch, init, fn):
+    B, S = 2, 64
+    cfg_small = _cfg(arch, 8)
+    cfg_full = _cfg(arch, 64)
+    p = init(KEY, cfg_full, jnp.float32)
+    u = jax.random.normal(KEY, (B, S, cfg_full.d_model))
+    y_full, _ = fn(p, u, cfg_full)
+    y_chunk, _ = fn(p, u, cfg_small)
+    np.testing.assert_allclose(y_chunk, y_full, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch,init,fn", [
+    ("falcon-mamba-7b", init_mamba1, mamba1),
+    ("zamba2-7b", init_mamba2, mamba2),
+])
+def test_decode_state_equals_prefill(arch, init, fn):
+    from repro.models.model import _block_cache
+
+    B, S = 2, 32
+    cfg = _cfg(arch, 8)
+    kind = "M" if arch.startswith("falcon") else "S"
+    p = init(KEY, cfg, jnp.float32)
+    u = jax.random.normal(KEY, (B, S, cfg.d_model))
+    y_full, _ = fn(p, u, cfg)
+    cache = jax.tree.map(
+        lambda x: x.astype(jnp.float32), _block_cache(kind, cfg, B, S, jnp.float32)
+    )
+    cache = {k: v for k, v in cache.items() if k in ("conv", "conv_bc", "h")}
+    ys = []
+    for t in range(S):
+        y, cache = fn(p, u[:, t:t + 1], cfg, cache)
+        ys.append(y[:, 0])
+    np.testing.assert_allclose(jnp.stack(ys, 1), y_full, rtol=5e-4, atol=5e-4)
+
+
+def test_mamba2_state_decay_bounds():
+    """Hypothesis-style invariant: with dt>=0 the decay factor is in (0,1]."""
+    cfg = _cfg("zamba2-7b", 8)
+    p = init_mamba2(KEY, cfg, jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    dt = jax.nn.softplus(jax.random.normal(KEY, (100,)) + p["dt_bias"][0])
+    decay = jnp.exp(dt * A[0])
+    assert bool(jnp.all(decay > 0)) and bool(jnp.all(decay <= 1.0))

@@ -1,0 +1,69 @@
+"""Fault tolerance: checkpoint/resume determinism, atomic commit, elasticity."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.launch.train import run
+
+
+def test_resume_is_bitwise_deterministic(tmp_path):
+    """Crash after step 9 + resume == uninterrupted run (same data, same loss)."""
+    d1 = str(tmp_path / "a")
+    full = run("llama3.2-1b", steps=14, ckpt_dir=d1, ckpt_every=5,
+               global_batch=2, seq_len=16, quiet=True)
+    d2 = str(tmp_path / "b")
+    run("llama3.2-1b", steps=10, ckpt_dir=d2, ckpt_every=5,
+        global_batch=2, seq_len=16, quiet=True)  # "crashes" after step 9
+    resumed = run("llama3.2-1b", steps=14, ckpt_dir=d2, ckpt_every=5,
+                  global_batch=2, seq_len=16, quiet=True)  # picks up at 10
+    np.testing.assert_allclose(resumed, full[10:], rtol=1e-5)
+
+
+def test_checkpoint_atomic_commit(tmp_path):
+    import jax.numpy as jnp
+
+    mgr = CheckpointManager(str(tmp_path))
+    params = {"w": jnp.ones((4, 4))}
+    opt = {"m": {"w": jnp.zeros((4, 4))}, "v": {"w": jnp.zeros((4, 4))},
+           "step": jnp.zeros((), jnp.int32)}
+    mgr.save(3, params, opt, {"arch": "t"})
+    assert mgr.latest_step() == 3
+    # a stale .tmp dir must never be visible as a committed step
+    os.makedirs(str(tmp_path / "step_000000007.tmp"))
+    assert mgr.latest_step() == 3
+    p2, o2, man = mgr.restore(3, params, opt)
+    np.testing.assert_array_equal(p2["w"], params["w"])
+    assert man["arch"] == "t"
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    import jax.numpy as jnp
+
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    params = {"w": jnp.ones(2)}
+    opt = {"m": {"w": jnp.zeros(2)}, "v": {"w": jnp.zeros(2)},
+           "step": jnp.zeros((), jnp.int32)}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, params, opt)
+    kept = sorted(n for n in os.listdir(tmp_path) if n.startswith("step_"))
+    assert len(kept) == 2 and kept[-1].endswith("4")
+
+
+def test_elastic_restore_different_topology(tmp_path):
+    """Checkpoints are global arrays: restoring re-shards to the current mesh."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mgr = CheckpointManager(str(tmp_path))
+    params = {"w": jnp.arange(16.0).reshape(4, 4)}
+    opt = {"m": {"w": jnp.zeros((4, 4))}, "v": {"w": jnp.zeros((4, 4))},
+           "step": jnp.zeros((), jnp.int32)}
+    mgr.save(0, params, opt, {"mesh": [1]})
+    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), params)
+    osh = jax.tree.map(lambda _: NamedSharding(mesh, P()), opt)
+    p2, _, _ = mgr.restore(0, params, opt, shardings=(sh, osh))
+    np.testing.assert_array_equal(np.asarray(p2["w"]), np.asarray(params["w"]))
