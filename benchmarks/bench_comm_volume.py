@@ -22,6 +22,17 @@ def main() -> None:
             ratio = un.comm_bytes_per_solve / max(1, zc.comm_bytes_per_solve)
             emit(f"fig3/{entry.name}/{D}dev", float(zc.comm_bytes_per_solve),
                  f"unified_over_zerocopy={ratio:.1f}")
+            # corrected syncfree figure: unified/syncfree also psums the
+            # in-degree counters every superstep ((B+1)-wide rows)
+            un_sf = build_plan(a, D, SolverConfig(block_size=16, comm="unified",
+                                                  sched="syncfree"))
+            zc_sf = build_plan(a, D, SolverConfig(block_size=16, comm="zerocopy",
+                                                  sched="syncfree",
+                                                  partition="taskpool"))
+            sf_ratio = un_sf.comm_bytes_per_solve / max(1, zc_sf.comm_bytes_per_solve)
+            emit(f"fig3/{entry.name}/{D}dev/syncfree",
+                 float(zc_sf.comm_bytes_per_solve),
+                 f"unified_over_zerocopy={sf_ratio:.1f}")
 
 
 if __name__ == "__main__":

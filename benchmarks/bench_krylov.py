@@ -1,0 +1,69 @@
+"""Krylov workload bench: SpTRSV as the hot path of preconditioned solves.
+
+Sweeps (suite matrix) x (comm mode) x (RHS batch width) for IC(0)-PCG on the
+SPD expansion of each factor. All three distributed executables (SpMV, L
+solve, L^T solve) are planned and compiled ONCE per (matrix, comm) cell and
+reused for the warm-up and the timed run — so the timed figure is the paper's
+amortized regime, not setup cost. Reported per cell:
+
+* ``us_per_call``  — wall time per PCG *iteration* (one SpMV plus an L and an
+  L^T distributed triangular solve over the whole RHS panel)
+* derived          — iteration count, SpTRSV invocations in the timed run,
+  and per-system iteration time (``us_per_iter / R``: the multi-RHS
+  amortization factor)
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_scale, emit
+from repro import compat
+from repro.core import SolverConfig, build_plan
+from repro.krylov import (
+    DistributedSpMV,
+    make_ic0_preconditioner,
+    pcg,
+    spd_lower_from_triangular,
+)
+from repro.sparse.suite import table1_suite
+
+FOCUS = ("roadNet-CA", "dc2", "webbase-1M")
+BATCHES = (1, 4, 16)
+
+
+def main() -> None:
+    import jax
+
+    D = len(jax.devices())
+    mesh = compat.make_mesh((D,), ("x",), devices=jax.devices()[:D])
+    for entry in [e for e in table1_suite(bench_scale()) if e.name in FOCUS]:
+        a = spd_lower_from_triangular(entry.build())
+        rng = np.random.default_rng(0)
+        for comm in ("zerocopy", "unified"):
+            cfg = SolverConfig(block_size=16, comm=comm, partition="taskpool")
+            plan = build_plan(a, D, cfg)
+            spmv = DistributedSpMV(plan, mesh)
+            psolve, handles = make_ic0_preconditioner(a, mesh=mesh, config=cfg,
+                                                      part=plan.part)
+            fwd, bwd = handles["forward"], handles["backward"]
+            for R in BATCHES:
+                b = rng.uniform(-1, 1, (a.n, R)) if R > 1 else rng.uniform(-1, 1, a.n)
+                pcg(spmv.matvec, b, psolve=psolve, tol=1e-8)  # compile this shape
+                calls0 = fwd.n_solves + bwd.n_solves
+                t0 = time.perf_counter()
+                res = pcg(spmv.matvec, b, psolve=psolve, tol=1e-8)
+                dt = time.perf_counter() - t0
+                iters = max(1, res.n_iters)
+                us_iter = dt / iters * 1e6
+                emit(
+                    f"krylov/{entry.name}/{comm}/{D}dev/rhs{R}", us_iter,
+                    f"iters={res.n_iters};trsv_calls="
+                    f"{fwd.n_solves + bwd.n_solves - calls0};"
+                    f"us_per_system_iter={us_iter / R:.1f}",
+                )
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro import compat
 from benchmarks.common import emit, time_call
 
 ARCHS = ["llama3.2-1b", "gemma2-2b", "falcon-mamba-7b", "zamba2-7b",
@@ -22,8 +23,7 @@ def main() -> None:
     from repro.train.optim import adamw_init
     from repro.train.step import make_train_step
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     for arch in ARCHS:
         cfg = get_reduced(arch)
         params = init_params(cfg, jax.random.PRNGKey(0))

@@ -9,6 +9,7 @@ import os
 
 import numpy as np
 
+from repro import compat
 from benchmarks.common import bench_scale, emit, time_call
 from repro.core import DistributedSolver, SolverConfig, build_plan, solve_local
 from repro.core.blocking import pad_rhs
@@ -37,8 +38,7 @@ def main() -> None:
             total_tasks = 32
             cfg = SolverConfig(block_size=16, comm="zerocopy", partition="taskpool",
                                tasks_per_device=max(1, total_tasks // D))
-            mesh = jax.make_mesh((D,), ("x",), devices=jax.devices()[:D],
-                                 axis_types=(jax.sharding.AxisType.Auto,))
+            mesh = compat.make_mesh((D,), ("x",), devices=jax.devices()[:D])
             solver = DistributedSolver(build_plan(a, D, cfg), mesh)
             us = time_call(solver.solve_blocks, b)
             emit(f"fig10/{entry.name}/{D}dev", us, f"speedup_vs_1dev={base_us/us:.2f}")

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro import compat
 from benchmarks.common import bench_scale, emit, time_call
 from repro.core import DistributedSolver, SolverConfig, build_plan
 from repro.core.blocking import pad_rhs
@@ -33,8 +34,7 @@ def main() -> None:
 
     D = 4
     assert len(jax.devices()) >= D, "run via benchmarks.run (forces device count)"
-    mesh = jax.make_mesh((D,), ("x",), devices=jax.devices()[:D],
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((D,), ("x",), devices=jax.devices()[:D])
     for entry in table1_suite(bench_scale()):
         a = entry.build()
         rng = np.random.default_rng(0)

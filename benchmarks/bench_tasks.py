@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro import compat
 from benchmarks.common import bench_scale, emit, time_call
 from repro.core import DistributedSolver, SolverConfig, build_plan
 from repro.core.blocking import pad_rhs
@@ -20,8 +21,7 @@ def main() -> None:
     import jax.numpy as jnp
 
     D = 4
-    mesh = jax.make_mesh((D,), ("x",), devices=jax.devices()[:D],
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((D,), ("x",), devices=jax.devices()[:D])
     suite = [e for e in table1_suite(bench_scale())
              if e.name in ("webbase-1M", "dc2", "pkustk14", "nlpkkt160", "delaunay_n20")]
     for entry in suite:

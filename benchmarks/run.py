@@ -10,7 +10,10 @@
 
 Multi-device sections run in subprocesses with forced host device counts.
 ``REPRO_BENCH_SCALE`` scales the Table-I suite (default 0.1);
-``REPRO_BENCH_FAST=1`` runs a reduced set for CI-style smoke runs.
+``REPRO_BENCH_FAST=1`` (or ``--quick``) runs a reduced set for CI-style smoke
+runs.
+
+  krylov  IC(0)-PCG iteration cost, suite x comm x RHS batch
 """
 from __future__ import annotations
 
@@ -25,7 +28,7 @@ from benchmarks.common import run_with_devices  # noqa: E402
 
 def main() -> None:
     print("name,us_per_call,derived")
-    fast = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+    fast = os.environ.get("REPRO_BENCH_FAST", "0") == "1" or "--quick" in sys.argv[1:]
     scale = os.environ.get("REPRO_BENCH_SCALE", "0.05" if fast else "0.1")
     env = {"REPRO_BENCH_SCALE": scale}
 
@@ -38,6 +41,7 @@ def main() -> None:
     # multi-device sections (subprocess with forced device count)
     print(run_with_devices("benchmarks.bench_scenarios", 4, env), end="")
     if not fast:
+        print(run_with_devices("benchmarks.bench_krylov", 4, env), end="")
         print(run_with_devices("benchmarks.bench_tasks", 4, env), end="")
         print(run_with_devices("benchmarks.bench_scaling", 8, env), end="")
         print(run_with_devices("benchmarks.bench_lm_step", 1, env), end="")

@@ -9,6 +9,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import numpy as np
 
+from repro import compat
 from repro.core import SolverConfig, build_plan, cut_stats, metrics, sptrsv
 from repro.core.analysis import level_sets
 from repro.sparse import suite
@@ -23,7 +24,7 @@ b = np.random.default_rng(0).uniform(-1, 1, a.n)
 x_ref = reference_solve(a, b)
 
 D = len(jax.devices())
-mesh = jax.make_mesh((D,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((D,), ("x",))
 print(f"devices: {D}")
 
 for name, cfg in {

@@ -85,11 +85,13 @@ def build_blocks(a: CSR, B: int) -> BlockStructure:
 
 
 def pad_rhs(b: np.ndarray, bs: BlockStructure) -> np.ndarray:
-    """(n,) -> (nb, B) block layout, zero padded."""
-    out = np.zeros(bs.nb * bs.B, dtype=np.float32)
+    """(n,) -> (nb, B) block layout; (n, k) RHS panels -> (nb, B, k)."""
+    b = np.asarray(b, dtype=np.float32)
+    out = np.zeros((bs.nb * bs.B,) + b.shape[1:], dtype=np.float32)
     out[: bs.n] = b
-    return out.reshape(bs.nb, bs.B)
+    return out.reshape((bs.nb, bs.B) + b.shape[1:])
 
 
 def unpad_x(xb: np.ndarray, bs: BlockStructure) -> np.ndarray:
-    return np.asarray(xb).reshape(-1)[: bs.n]
+    xb = np.asarray(xb)
+    return xb.reshape((-1,) + xb.shape[2:])[: bs.n]

@@ -33,10 +33,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.blocking import BlockStructure, build_blocks
 from repro.core.partition import Partition, make_partition
 from repro.kernels import ops
-from repro.sparse.matrix import CSR
+from repro.sparse.matrix import CSR, reverse_transpose
 
 AXIS = "x"  # device axis name used by the solver
 
@@ -74,6 +75,15 @@ class Plan:
     tile_row: np.ndarray  # (D, ML+1) dest block-row per local tile, pad nb
     tile_col: np.ndarray  # (D, ML+1) src block-col per local tile, pad nb
     tiles: np.ndarray  # (D, ML+1, B, B) zero tile at pad slot
+    transpose: bool = False  # plan solves a^T x = b (built on reverse_transpose(a))
+
+    @property
+    def n_supersteps(self) -> int:
+        """Bulk-synchronous supersteps per solve. Levelset executes one
+        superstep per block level; syncfree's runtime frontier discovery also
+        converges level-by-level (each superstep solves exactly the rows whose
+        in-degree count completed, i.e. the next block level)."""
+        return self.n_levels
 
     @property
     def comm_bytes_per_solve(self) -> int:
@@ -81,17 +91,33 @@ class Plan:
         B = self.bs.B
         itemsize = 4
         if self.config.comm == "unified":
-            per_step = (self.bs.nb + 1) * B * itemsize
-            steps = self.n_levels if self.config.sched == "levelset" else self.n_levels
-            return per_step * steps
+            # syncfree additionally psums the per-row in-degree counters each
+            # superstep (Alg. 2's s.left_sum AND the dependency counters).
+            width = B if self.config.sched == "levelset" else B + 1
+            return (self.bs.nb + 1) * width * itemsize * self.n_supersteps
         if self.config.sched == "levelset":
             return int(self.ex_levels.size) * B * itemsize
-        return int(self.ex_boundary.size) * (B + 1) * itemsize * self.n_levels
+        return int(self.ex_boundary.size) * (B + 1) * itemsize * self.n_supersteps
 
 
-def build_plan(a: CSR, n_devices: int, config: SolverConfig = SolverConfig()) -> Plan:
+def build_plan(
+    a: CSR, n_devices: int, config: SolverConfig = SolverConfig(),
+    *, transpose: bool = False, part: Partition | None = None,
+) -> Plan:
+    """``part`` reuses an existing partition computed for the same sparsity
+    (e.g. a zero-fill factor shares its matrix's pattern, so one partition
+    serves both plans). Not applicable to transpose plans (reversed order)."""
+    if transpose:
+        # Solve a^T x = b with the forward-substitution machinery: reverse row
+        # and column order of a^T, which is lower-triangular again; rhs/solution
+        # are flipped at the DistributedSolver boundary.
+        assert part is None, "partition reuse is not valid across reversal"
+        a = reverse_transpose(a)
     bs = build_blocks(a, config.block_size)
-    part = make_partition(bs, n_devices, config.partition, config.tasks_per_device)
+    if part is None:
+        part = make_partition(bs, n_devices, config.partition, config.tasks_per_device)
+    else:
+        assert part.owner.shape[0] == bs.nb, "partition/block-structure mismatch"
     nb, B, D = bs.nb, bs.B, n_devices
     T = bs.n_block_levels
 
@@ -157,6 +183,7 @@ def build_plan(a: CSR, n_devices: int, config: SolverConfig = SolverConfig()) ->
         diag=diag, owner=owner, indeg=indeg, ex_levels=ex_levels,
         ex_boundary=ex_boundary, solve_rows=solve_rows, upd_tiles=upd_tiles,
         local_rows=local_rows, tile_row=tile_row, tile_col=tile_col, tiles=tiles,
+        transpose=transpose,
     )
 
 
@@ -175,7 +202,9 @@ def solve_local(plan: Plan, b_blocks: jax.Array) -> jax.Array:
     trow = jnp.asarray(plan.tile_row[0])
     tcol = jnp.asarray(plan.tile_col[0])
     tiles = jnp.asarray(plan.tiles[0])
-    b_pad = jnp.concatenate([b_blocks, jnp.zeros((1, B), b_blocks.dtype)])
+    b_pad = jnp.concatenate(
+        [b_blocks, jnp.zeros((1,) + b_blocks.shape[1:], b_blocks.dtype)]
+    )
 
     def body(t, carry):
         acc, x = carry
@@ -184,7 +213,7 @@ def solve_local(plan: Plan, b_blocks: jax.Array) -> jax.Array:
         xs = ops.batched_block_trsv(
             diag[safe], b_pad[safe] - acc[safe], backend=cfg.kernel_backend
         )
-        x = x.at[safe].set(jnp.where((rows >= 0)[:, None], xs, x[safe]))
+        x = x.at[safe].set(jnp.where(ops.bcast_trailing(rows >= 0, xs), xs, x[safe]))
         tids = jax.lax.dynamic_index_in_dim(ut, t, 0, keepdims=False)
         prods = ops.batched_block_gemv(
             tiles[tids], x[tcol[tids]], backend=cfg.kernel_backend, group=cfg.gemv_group
@@ -192,7 +221,7 @@ def solve_local(plan: Plan, b_blocks: jax.Array) -> jax.Array:
         acc = acc.at[trow[tids]].add(prods)
         return acc, x
 
-    acc0 = jnp.zeros((nb + 1, B), b_blocks.dtype)
+    acc0 = jnp.zeros_like(b_pad)
     _, x = jax.lax.fori_loop(0, plan.n_levels, body, (acc0, acc0))
     return x[:nb]
 
@@ -226,7 +255,7 @@ def _levelset_device_fn(plan: Plan):
             xs = ops.batched_block_trsv(
                 diag[safe], b_pad[safe] - acc[safe], backend=cfg.kernel_backend
             )
-            x = x.at[safe].set(jnp.where((rows >= 0)[:, None], xs, x[safe]))
+            x = x.at[safe].set(jnp.where(ops.bcast_trailing(rows >= 0, xs), xs, x[safe]))
             tids = jax.lax.dynamic_index_in_dim(ut, t, 0, keepdims=False)
             prods = ops.batched_block_gemv(
                 tiles[tids], x[tcol[tids]], backend=cfg.kernel_backend, group=cfg.gemv_group
@@ -234,9 +263,9 @@ def _levelset_device_fn(plan: Plan):
             acc = acc.at[trow[tids]].add(prods)
             return acc, x
 
-        acc0 = jnp.zeros((nb + 1, B), b_pad.dtype)
+        acc0 = jnp.zeros_like(b_pad)
         _, x = jax.lax.fori_loop(0, T, body, (acc0, acc0))
-        xg = x * owner_mask[:, None]
+        xg = x * ops.bcast_trailing(owner_mask, x)
         if plan.n_devices > 1:
             xg = jax.lax.psum(xg, AXIS)
         return xg[:nb]
@@ -265,7 +294,7 @@ def _levelset_unified_device_fn(plan: Plan):
             xs = ops.batched_block_trsv(
                 diag[safe], b_pad[safe] - acc_red[safe], backend=cfg.kernel_backend
             )
-            x = x.at[safe].set(jnp.where((rows >= 0)[:, None], xs, x[safe]))
+            x = x.at[safe].set(jnp.where(ops.bcast_trailing(rows >= 0, xs), xs, x[safe]))
             tids = jax.lax.dynamic_index_in_dim(ut, t, 0, keepdims=False)
             prods = ops.batched_block_gemv(
                 tiles[tids], x[tcol[tids]], backend=cfg.kernel_backend, group=cfg.gemv_group
@@ -273,9 +302,9 @@ def _levelset_unified_device_fn(plan: Plan):
             delta = delta.at[trow[tids]].add(prods)
             return acc_red, delta, x
 
-        z = jnp.zeros((nb + 1, B), b_pad.dtype)
+        z = jnp.zeros_like(b_pad)
         _, _, x = jax.lax.fori_loop(0, T, body, (z, z, z))
-        return jax.lax.psum(x * owner_mask[:, None], AXIS)[:nb]
+        return jax.lax.psum(x * ops.bcast_trailing(owner_mask, x), AXIS)[:nb]
 
     return fn
 
@@ -313,7 +342,7 @@ def _syncfree_device_fn(plan: Plan):
             xs = ops.batched_block_trsv(
                 ldiag, lb - acc_red[lr], backend=cfg.kernel_backend
             )
-            x = x.at[lr].set(jnp.where(ready[:, None], xs, x[lr]))
+            x = x.at[lr].set(jnp.where(ops.bcast_trailing(ready, xs), xs, x[lr]))
             solved = solved.at[lr].set(jnp.logical_or(solved[lr], ready))
             # 3. updates from tiles whose source column solved THIS superstep
             just = jnp.zeros((nb + 1,), jnp.bool_).at[lr].set(ready)
@@ -321,12 +350,13 @@ def _syncfree_device_fn(plan: Plan):
             prods = ops.batched_block_gemv(
                 tiles, x[tcol], backend=cfg.kernel_backend, group=cfg.gemv_group
             )
-            pm = jnp.where(tmask[:, None], prods, 0.0)
+            pm = jnp.where(ops.bcast_trailing(tmask, prods), prods, 0.0)
             cm = tmask.astype(jnp.int32)
             if multi:
-                acc_red = acc_red.at[trow].add(jnp.where(dest_mine[:, None], pm, 0.0))
+                dm = ops.bcast_trailing(dest_mine, pm)
+                acc_red = acc_red.at[trow].add(jnp.where(dm, pm, 0.0))
                 cnt_red = cnt_red.at[trow].add(jnp.where(dest_mine, cm, 0))
-                delta = delta.at[trow].add(jnp.where(dest_mine[:, None], 0.0, pm))
+                delta = delta.at[trow].add(jnp.where(dm, 0.0, pm))
                 dcnt = dcnt.at[trow].add(jnp.where(dest_mine, 0, cm))
                 # 4. exchange remote contributions
                 if zerocopy:
@@ -353,7 +383,7 @@ def _syncfree_device_fn(plan: Plan):
                 solved=solved, x=x, done=remaining == 0,
             )
 
-        zf = jnp.zeros((nb + 1, B), b_pad.dtype)
+        zf = jnp.zeros_like(b_pad)
         zi = jnp.zeros((nb + 1,), jnp.int32)
         state = dict(
             acc_red=zf, delta=zf, cnt_red=zi, dcnt=zi,
@@ -361,7 +391,7 @@ def _syncfree_device_fn(plan: Plan):
             done=jnp.asarray(False),
         )
         state = jax.lax.while_loop(cond, body, state)
-        xg = state["x"] * owner_mask[:, None]
+        xg = state["x"] * ops.bcast_trailing(owner_mask, state["x"])
         if multi:
             xg = jax.lax.psum(xg, AXIS)
         return xg[:nb]
@@ -370,12 +400,18 @@ def _syncfree_device_fn(plan: Plan):
 
 
 class DistributedSolver:
-    """Compiled multi-device SpTRSV for one (matrix, partition, mesh)."""
+    """Compiled multi-device SpTRSV for one (matrix, partition, mesh).
+
+    One instance is compiled once and invoked many times — the amortized
+    regime of preconditioned Krylov loops. ``n_solves`` counts invocations
+    (each multi-RHS panel counts once: one compiled solve serves R systems).
+    """
 
     def __init__(self, plan: Plan, mesh: jax.sharding.Mesh):
         assert mesh.devices.size == plan.n_devices, (mesh.devices.size, plan.n_devices)
         self.plan = plan
         self.mesh = mesh
+        self.n_solves = 0
         nb = plan.bs.nb
         D = plan.n_devices
         owner_mask = np.zeros((D, nb + 1), np.float32)
@@ -401,30 +437,38 @@ class DistributedSolver:
             self._args = (plan.local_rows, plan.tile_row, plan.tile_col,
                           plan.tiles, owner_mask, plan.diag, plan.indeg,
                           plan.ex_boundary)
-        mapped = jax.shard_map(
+        mapped = compat.shard_map(
             fn, mesh=mesh, in_specs=in_specs, out_specs=P(),
-            check_vma=False,
         )
         self._jitted = jax.jit(mapped)
 
     def solve_blocks(self, b_blocks: jax.Array) -> jax.Array:
-        B = self.plan.bs.B
-        b_pad = jnp.concatenate([b_blocks, jnp.zeros((1, B), b_blocks.dtype)])
+        """b_blocks: (nb, B) or a multi-RHS panel (nb, B, R) -> same shape."""
+        self.n_solves += 1
+        b_pad = jnp.concatenate(
+            [b_blocks, jnp.zeros((1,) + b_blocks.shape[1:], b_blocks.dtype)]
+        )
         return self._jitted(*self._args, b_pad)
 
     def solve(self, b: np.ndarray) -> np.ndarray:
+        """b: (n,) or (n, R) RHS panel. Transpose plans flip row order at this
+        boundary (the plan was built on ``reverse_transpose(a)``)."""
         from repro.core.blocking import pad_rhs, unpad_x
 
-        b_blocks = jnp.asarray(pad_rhs(np.asarray(b, np.float32), self.plan.bs))
-        return unpad_x(np.asarray(self.solve_blocks(b_blocks)), self.plan.bs)
+        b = np.asarray(b, np.float32)
+        if self.plan.transpose:
+            b = b[::-1]
+        b_blocks = jnp.asarray(pad_rhs(b, self.plan.bs))
+        x = unpad_x(np.asarray(self.solve_blocks(b_blocks)), self.plan.bs)
+        return x[::-1].copy() if self.plan.transpose else x
 
 
 def sptrsv(
     a: CSR, b: np.ndarray, *, mesh: jax.sharding.Mesh | None = None,
-    config: SolverConfig = SolverConfig(),
+    config: SolverConfig = SolverConfig(), transpose: bool = False,
 ) -> np.ndarray:
-    """One-shot convenience API: analyse, plan, solve Lx=b."""
+    """One-shot convenience API: analyse, plan, solve Lx=b (or L^T x=b)."""
     if mesh is None:
-        mesh = jax.make_mesh((1,), (AXIS,))
-    plan = build_plan(a, int(mesh.devices.size), config)
+        mesh = compat.make_mesh((1,), (AXIS,))
+    plan = build_plan(a, int(mesh.devices.size), config, transpose=transpose)
     return DistributedSolver(plan, mesh).solve(b)

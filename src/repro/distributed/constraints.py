@@ -16,14 +16,15 @@ flash-attention buffers across all 256 devices (EXPERIMENTS.md §Perf).
 from __future__ import annotations
 
 import jax
+from repro import compat
 from jax.sharding import PartitionSpec as P
 
 
 def constrain(x: jax.Array, *tags: str | None) -> jax.Array:
     """Tags: "dp" (non-model axes), "model", "dpm" (ALL axes — fully
     data-parallel batch, used when a layer family opts out of TP), None."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty or "model" not in mesh.axis_names:
+    mesh = compat.get_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
         return x
     assert len(tags) == x.ndim, (tags, x.shape)
     msize = mesh.shape["model"]

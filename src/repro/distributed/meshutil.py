@@ -3,13 +3,11 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 
 def make_mesh(shape, axes, devices=None) -> jax.sharding.Mesh:
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-        devices=devices,
-    )
+    return compat.make_mesh(shape, axes, devices=devices)
 
 
 def dp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

@@ -51,6 +51,33 @@ def block_gemv(tiles: jax.Array, xs: jax.Array, *, interpret: bool = False) -> j
     )(tiles, xs)
 
 
+def _gemm_kernel(t_ref, x_ref, o_ref):
+    # t_ref: (1,B,B), x_ref: (1,B,R), o_ref: (1,B,R) — per-tile (B,B)@(B,R)
+    o_ref[0] = jnp.dot(t_ref[0], x_ref[0], preferred_element_type=t_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_gemm(tiles: jax.Array, xs: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """Multi-RHS tile products: tiles (m,B,B) @ xs (m,B,R) -> (m,B,R).
+
+    The RHS panel turns each tile's MXU call from a matvec into a (B,B)@(B,R)
+    matmul — the serving-scale batching path (one compiled solve, R systems).
+    """
+    m, B, _ = tiles.shape
+    R = xs.shape[-1]
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((1, B, B), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, B, R), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, B, R), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, B, R), tiles.dtype),
+        interpret=interpret,
+    )(tiles, xs)
+
+
 @functools.partial(jax.jit, static_argnames=("group", "interpret"))
 def block_gemv_grouped(
     tiles: jax.Array, xs: jax.Array, *, group: int = 8, interpret: bool = False

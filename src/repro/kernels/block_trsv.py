@@ -74,6 +74,48 @@ def _trsv_panel_kernel(l_ref, r_ref, x_ref, *, panel: int):
     x_ref[...] = x
 
 
+def _trsm_rowsweep_kernel(l_ref, r_ref, x_ref):
+    # Multi-RHS row sweep: l_ref (1,B,B), r_ref/x_ref (1,B,R). Same forward
+    # substitution as _trsv_rowsweep_kernel, but the per-row partial dot is a
+    # masked (1,B)@(B,R) matmul — one MXU call amortized over all R systems.
+    B = l_ref.shape[-1]
+    R = r_ref.shape[-1]
+    L = l_ref[0]  # (B,B)
+    r = r_ref[0]  # (B,R)
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, B), 1)
+    row = jax.lax.broadcasted_iota(jnp.int32, (B, 1), 0)
+
+    def body(i, x):
+        li = jax.lax.dynamic_slice(L, (i, 0), (1, B))  # (1,B) row i
+        s = jnp.dot(
+            jnp.where(col < i, li, 0.0), x, preferred_element_type=jnp.float32
+        )  # (1,R) partial dots over the solved prefix, all RHS at once
+        lii = jnp.sum(jnp.where(col == i, li, 0.0))
+        ri = jax.lax.dynamic_slice(r, (i, 0), (1, R))  # (1,R)
+        xi = (ri - s) / lii
+        return jnp.where(row == i, xi, x)
+
+    x_ref[0] = jax.lax.fori_loop(0, B, body, jnp.zeros((B, R), l_ref.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_trsm(diag: jax.Array, rhs: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """Batched multi-RHS solve: (k,B,B) tiles × (k,B,R) panels -> (k,B,R)."""
+    k, B, _ = diag.shape
+    R = rhs.shape[-1]
+    return pl.pallas_call(
+        _trsm_rowsweep_kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, B, B), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, B, R), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, B, R), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, B, R), diag.dtype),
+        interpret=interpret,
+    )(diag, rhs)
+
+
 @functools.partial(jax.jit, static_argnames=("algorithm", "panel", "interpret"))
 def block_trsv(
     diag: jax.Array,

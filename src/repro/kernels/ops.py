@@ -6,6 +6,10 @@ Backends:
 * ``pallas``    — the TPU kernels; on CPU they run in interpret mode
   (used by tests to validate kernel semantics), on TPU they compile natively.
 
+Every op accepts either a single right-hand side per tile (``(k, B)``) or a
+multi-RHS panel (``(k, B, R)``) — the panel path serves R systems from one
+compiled solve (dispatched here by rhs rank).
+
 Select globally with env ``REPRO_KERNEL_BACKEND`` or per-call with ``backend=``.
 """
 from __future__ import annotations
@@ -15,8 +19,8 @@ import os
 import jax
 
 from repro.kernels import ref
-from repro.kernels.block_spmv import block_gemv, block_gemv_grouped
-from repro.kernels.block_trsv import block_trsv
+from repro.kernels.block_spmv import block_gemm, block_gemv, block_gemv_grouped
+from repro.kernels.block_trsv import block_trsm, block_trsv
 
 
 def _default_backend() -> str:
@@ -30,11 +34,19 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def bcast_trailing(mask: jax.Array, x: jax.Array) -> jax.Array:
+    """Reshape ``mask`` with trailing singleton dims so it broadcasts against
+    ``x`` — lets solver code stay agnostic to single- vs multi-RHS shapes."""
+    return mask.reshape(mask.shape + (1,) * (x.ndim - mask.ndim))
+
+
 def batched_block_trsv(diag: jax.Array, rhs: jax.Array, *, backend: str | None = None,
                        algorithm: str = "rowsweep") -> jax.Array:
     backend = backend or _default_backend()
     if backend == "reference":
         return ref.block_trsv_ref(diag, rhs)
+    if rhs.ndim == 3:
+        return block_trsm(diag, rhs, interpret=_interpret())
     return block_trsv(diag, rhs, algorithm=algorithm, interpret=_interpret())
 
 
@@ -43,6 +55,8 @@ def batched_block_gemv(tiles: jax.Array, xs: jax.Array, *, backend: str | None =
     backend = backend or _default_backend()
     if backend == "reference":
         return ref.block_gemv_ref(tiles, xs)
+    if xs.ndim == 3:
+        return block_gemm(tiles, xs, interpret=_interpret())
     if group > 1:
         return block_gemv_grouped(tiles, xs, group=group, interpret=_interpret())
     return block_gemv(tiles, xs, interpret=_interpret())

@@ -10,15 +10,23 @@ import jax.numpy as jnp
 
 
 def block_trsv_ref(diag: jax.Array, rhs: jax.Array) -> jax.Array:
-    """Batched dense lower-triangular solve: diag (k,B,B), rhs (k,B) -> (k,B)."""
+    """Batched dense lower-triangular solve.
+
+    rhs may be a single vector per tile ``(k, B)`` or a multi-RHS panel
+    ``(k, B, R)`` — one solve amortized over R right-hand sides.
+    """
+    multi = rhs.ndim == 3
+    r = rhs if multi else rhs[..., None]
     sol = jax.lax.linalg.triangular_solve(
-        diag, rhs[..., None], left_side=True, lower=True, transpose_a=False
+        diag, r, left_side=True, lower=True, transpose_a=False
     )
-    return sol[..., 0]
+    return sol if multi else sol[..., 0]
 
 
 def block_gemv_ref(tiles: jax.Array, xs: jax.Array) -> jax.Array:
-    """Batched tile*vector: tiles (m,B,B), xs (m,B) -> (m,B)."""
+    """Batched tile*vector: tiles (m,B,B), xs (m,B) or (m,B,R) panels."""
+    if xs.ndim == 3:
+        return jnp.einsum("mij,mjr->mir", tiles, xs)
     return jnp.einsum("mij,mj->mi", tiles, xs)
 
 

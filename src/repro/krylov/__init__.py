@@ -1,0 +1,19 @@
+"""Krylov + preconditioner subsystem: distributed SpTRSV as the hot path of
+real iterative solves (paper §I motivation)."""
+from repro.krylov.api import (
+    make_ic0_preconditioner,
+    make_ilu0_preconditioner,
+    solve_cg,
+    solve_ic0_pcg,
+    solve_ilu0_bicgstab,
+)
+from repro.krylov.bicgstab import bicgstab
+from repro.krylov.cg import KrylovResult, pcg
+from repro.krylov.precond import (
+    ic0,
+    ilu0,
+    matvec_lower,
+    spd_lower_from_triangular,
+    symmetric_full_csr,
+)
+from repro.krylov.spmv import DistributedSpMV

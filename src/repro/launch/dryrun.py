@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.configs import ARCH_IDS, SHAPES, cell_applicable, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import (
@@ -113,7 +114,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str, *, verbose=Tru
     cfg = get_config(arch)
     t0 = time.perf_counter()
     try:
-        with jax.set_mesh(mesh):  # ambient mesh: activation constraints resolve
+        with compat.set_mesh(mesh):  # ambient mesh: activation constraints resolve
             fn, args, donate = build_step(arch, shape, mesh)
             lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
             t_lower = time.perf_counter() - t0
@@ -121,7 +122,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str, *, verbose=Tru
             t_compile = time.perf_counter() - t0 - t_lower
         mem = compiled.memory_analysis()
         print(mem)
-        cost = compiled.cost_analysis()
+        cost = compat.cost_analysis(compiled)
         print({k: v for k, v in cost.items() if k in ("flops", "bytes accessed")})
         # loop-aware re-analysis: XLA's cost_analysis counts while bodies once;
         # hlo_cost multiplies through known_trip_count (see repro.launch.hlo_cost)

@@ -130,7 +130,10 @@ def _dot_cost(line: str, symbols: dict) -> tuple[float, float]:
     contraction = 1
     in_bytes = 0
     if args_m:
-        names = [a.strip().lstrip("%") for a in args_m.group(1).split(",")]
+        # operands print as "%name" (new XLA) or "f32[...]{...} %name" (old XLA)
+        names = re.findall(r"%([\w\.\-]+)", args_m.group(1)) or [
+            a.strip().lstrip("%") for a in args_m.group(1).split(",")
+        ]
         for nm in names:
             if nm in symbols:
                 in_bytes += _shape_elems_bytes(symbols[nm])[1]

@@ -4,6 +4,8 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -11,10 +13,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     n = 1
     for s in shape:
         n *= s
-    return jax.make_mesh(
-        shape, axes, devices=jax.devices()[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return compat.make_mesh(shape, axes, devices=jax.devices()[:n])
 
 
 def make_host_mesh(n: int | None = None, axes=("data", "model")) -> jax.sharding.Mesh:
@@ -26,7 +25,4 @@ def make_host_mesh(n: int | None = None, axes=("data", "model")) -> jax.sharding
         shape = (n // model, model)
     else:
         shape = (n,)
-    return jax.make_mesh(
-        shape, axes, devices=devs[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return compat.make_mesh(shape, axes, devices=devs[:n])

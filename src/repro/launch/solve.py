@@ -11,6 +11,7 @@ import argparse
 import jax
 import numpy as np
 
+from repro import compat
 from repro.core import DistributedSolver, SolverConfig, build_plan, cut_stats, metrics
 from repro.core.analysis import level_sets
 from repro.sparse import suite
@@ -41,7 +42,7 @@ def main() -> None:
           f"dependency={m.dependency:.2f} parallelism={m.parallelism:.0f}")
 
     D = len(jax.devices())
-    mesh = jax.make_mesh((D,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((D,), ("x",))
     cfg = SolverConfig(block_size=args.block_size, comm=args.comm, sched=args.sched,
                        partition=args.partition, tasks_per_device=args.tasks_per_device)
     plan = build_plan(a, D, cfg)

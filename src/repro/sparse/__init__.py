@@ -1,2 +1,10 @@
-from repro.sparse.matrix import CSC, CSR, csc_to_csr, csr_to_csc, lower_triangular_from_coo
+from repro.sparse.matrix import (
+    CSC,
+    CSR,
+    csc_to_csr,
+    csr_to_csc,
+    csr_transpose,
+    lower_triangular_from_coo,
+    reverse_transpose,
+)
 from repro.sparse import suite

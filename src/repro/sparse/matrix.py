@@ -117,6 +117,32 @@ def lower_triangular_from_coo(
     return CSR(n=n, row_ptr=row_ptr, col_idx=all_cols.astype(np.int32), val=all_vals)
 
 
+def csr_transpose(a: CSR) -> CSR:
+    """CSR of A^T (a lower-triangular result when A is upper-triangular)."""
+    c = csr_to_csc(a)
+    return CSR(n=a.n, row_ptr=c.col_ptr.copy(), col_idx=c.row_idx.astype(np.int32),
+               val=c.val.copy())
+
+
+def reverse_transpose(a: CSR) -> CSR:
+    """R with ``R[i, j] = A[n-1-j, n-1-i]`` (transpose + reverse both orders).
+
+    For lower-triangular ``L`` this is again *lower*-triangular, and solving
+    ``L^T x = y`` is exactly ``R (Px) = Py`` with ``P`` the index-reversal
+    permutation — the trick that lets the forward-substitution solver execute
+    upper-triangular/transpose solves (the IC(0)/ILU(0) backward sweeps).
+    """
+    n = a.n
+    rows = np.repeat(np.arange(n, dtype=np.int64), np.diff(a.row_ptr))
+    cols = a.col_idx.astype(np.int64)
+    nr, nc = n - 1 - cols, n - 1 - rows
+    order = np.lexsort((nc, nr))
+    nr, nc, v = nr[order], nc[order], a.val[order]
+    row_ptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(np.bincount(nr, minlength=n), out=row_ptr[1:])
+    return CSR(n=n, row_ptr=row_ptr, col_idx=nc.astype(np.int32), val=v)
+
+
 def to_scipy(a: CSR):
     import scipy.sparse as sp
 

@@ -1,4 +1,7 @@
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property suite is optional (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.analysis import in_degrees, level_sets, metrics

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro import compat
 from repro.launch.hlo_cost import analyze
 
 A = jax.ShapeDtypeStruct((128, 128), jnp.float32)
@@ -50,16 +51,15 @@ def test_remat_grad_counts_recompute():
 
 
 def test_collectives_in_loops():
-    mesh = jax.make_mesh((1,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("x",))
 
     def h(x):
         y, _ = jax.lax.scan(lambda c, _: (jax.lax.psum(c, "x"), None),
                             x, None, length=7)
         return y
 
-    hs = jax.jit(jax.shard_map(h, mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
-                               out_specs=jax.sharding.PartitionSpec(),
-                               check_vma=False))
+    hs = jax.jit(compat.shard_map(h, mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
+                                  out_specs=jax.sharding.PartitionSpec()))
     c = hs.lower(jax.ShapeDtypeStruct((128,), jnp.float32)).compile()
     r = analyze(c.as_text())
     assert r["collective_bytes"]["all-reduce"] == 7 * 128 * 4

@@ -3,9 +3,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ref
-from repro.kernels.block_spmv import block_gemv, block_gemv_grouped
-from repro.kernels.block_trsv import block_trsv
+from repro.kernels import ops, ref
+from repro.kernels.block_spmv import block_gemm, block_gemv, block_gemv_grouped
+from repro.kernels.block_trsv import block_trsm, block_trsv
 
 
 def _tri(k, B, dtype, seed=0):
@@ -58,3 +58,52 @@ def test_trsv_solves_the_system():
     np.testing.assert_allclose(
         jnp.einsum("kij,kj->ki", L, x), r, rtol=1e-4, atol=1e-4
     )
+
+
+# ---------------------------------------------------------------------------
+# multi-RHS panels: one kernel launch serves R systems
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,k,R", [(8, 1, 2), (16, 3, 4), (32, 5, 8)])
+def test_trsm_matches_oracle(B, k, R):
+    L, _ = _tri(k, B, np.float32, seed=B + R)
+    r = jnp.asarray(np.random.default_rng(R).uniform(-1, 1, (k, B, R)).astype(np.float32))
+    out = block_trsm(L, r, interpret=True)
+    np.testing.assert_allclose(out, ref.block_trsv_ref(L, r), rtol=2e-5, atol=2e-5)
+
+
+def test_trsm_columns_equal_independent_trsv():
+    """Panel solve must be exactly R stacked single-RHS solves."""
+    k, B, R = 4, 16, 3
+    L, _ = _tri(k, B, np.float32, seed=9)
+    r = jnp.asarray(np.random.default_rng(9).uniform(-1, 1, (k, B, R)).astype(np.float32))
+    panel = block_trsm(L, r, interpret=True)
+    for j in range(R):
+        single = block_trsv(L, r[..., j], interpret=True)
+        np.testing.assert_allclose(panel[..., j], single, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,m,R", [(8, 1, 2), (16, 7, 4), (32, 4, 5)])
+def test_gemm_matches_oracle(B, m, R):
+    rng = np.random.default_rng(B + m + R)
+    T = jnp.asarray(rng.uniform(-1, 1, (m, B, B)).astype(np.float32))
+    x = jnp.asarray(rng.uniform(-1, 1, (m, B, R)).astype(np.float32))
+    out = block_gemm(T, x, interpret=True)
+    np.testing.assert_allclose(out, ref.block_gemv_ref(T, x), rtol=2e-5, atol=2e-5)
+
+
+def test_ops_dispatch_by_rhs_rank():
+    """ops wrappers route (k,B) and (k,B,R) to the right backend kernels."""
+    L, r = _tri(3, 16, np.float32, seed=2)
+    rp = jnp.asarray(np.random.default_rng(2).uniform(-1, 1, (3, 16, 4)).astype(np.float32))
+    for backend in ("reference", "pallas"):
+        out1 = ops.batched_block_trsv(L, r, backend=backend)
+        out2 = ops.batched_block_trsv(L, rp, backend=backend)
+        assert out1.shape == (3, 16) and out2.shape == (3, 16, 4)
+        np.testing.assert_allclose(out1, ref.block_trsv_ref(L, r), rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(out2, ref.block_trsv_ref(L, rp), rtol=2e-5, atol=2e-5)
+        g1 = ops.batched_block_gemv(L, r, backend=backend)
+        g2 = ops.batched_block_gemv(L, rp, backend=backend)
+        np.testing.assert_allclose(g1, ref.block_gemv_ref(L, r), rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(g2, ref.block_gemv_ref(L, rp), rtol=2e-5, atol=2e-5)

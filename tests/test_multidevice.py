@@ -33,7 +33,8 @@ def test_solver_all_modes_on_8_devices():
         a = suite.random_levelled(600, 24, 4.0, seed=5)
         b = np.random.default_rng(1).uniform(-1, 1, a.n)
         x_ref = reference_solve(a, b)
-        mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro import compat
+        mesh = compat.make_mesh((8,), ("x",))
         for comm in ["zerocopy", "unified"]:
             for sched in ["levelset", "syncfree"]:
                 for part in ["taskpool", "contiguous"]:
@@ -54,9 +55,9 @@ def test_lm_train_step_on_4_device_mesh():
         from repro.models import init_params
         from repro.train.optim import adamw_init
         from repro.train.step import make_train_step
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        with jax.set_mesh(mesh):
+        from repro import compat
+        mesh = compat.make_mesh((2, 2), ("data", "model"))
+        with compat.set_mesh(mesh):
             cfg = get_reduced("llama3.2-1b")
             params = init_params(cfg, jax.random.PRNGKey(0))
             opt = adamw_init(params)
@@ -79,9 +80,9 @@ def test_serve_decode_on_4_device_mesh():
         from repro.configs import get_reduced
         from repro.models import init_cache, init_params
         from repro.serve.engine import make_decode_step, make_prefill_step
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        with jax.set_mesh(mesh):
+        from repro import compat
+        mesh = compat.make_mesh((2, 2), ("data", "model"))
+        with compat.set_mesh(mesh):
             cfg = get_reduced("llama3.2-1b")
             params = init_params(cfg, jax.random.PRNGKey(0))
             B, S = 4, 32
@@ -98,3 +99,29 @@ def test_serve_decode_on_4_device_mesh():
             assert tok.shape == (B,)
         print("OK")
     """, devices=4))
+
+
+@pytest.mark.slow
+def test_krylov_pcg_on_4_devices():
+    """IC(0)-PCG with distributed SpMV + L/L^T solves on a real 4-device mesh."""
+    print(run_py("""
+        import numpy as np
+        import scipy.sparse.linalg as spla
+        from repro import compat
+        from repro.core import SolverConfig
+        from repro.krylov import solve_ic0_pcg, spd_lower_from_triangular, symmetric_full_csr
+        from repro.sparse import suite
+        from repro.sparse.matrix import to_scipy
+        a = spd_lower_from_triangular(suite.grid2d_factor(16, seed=1))
+        b = np.random.default_rng(2).uniform(-1, 1, a.n)
+        mesh = compat.make_mesh((4,), ("x",))
+        res = solve_ic0_pcg(a, b, mesh=mesh,
+                            config=SolverConfig(block_size=8, comm="zerocopy"), tol=1e-8)
+        assert res.converged, res.n_iters
+        assert res.info["forward"].n_solves == res.n_iters
+        x_ref = spla.spsolve(to_scipy(symmetric_full_csr(a)).tocsc(), b)
+        err = np.abs(res.x - x_ref).max() / np.abs(x_ref).max()
+        assert err < 1e-5, err
+        print("OK")
+    """, devices=4)
+    )

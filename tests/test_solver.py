@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.core import DistributedSolver, SolverConfig, build_plan, solve_local, sptrsv
 from repro.core.blocking import pad_rhs, unpad_x
 from repro.sparse import suite
@@ -11,8 +12,7 @@ from repro.sparse.matrix import reference_solve
 
 
 def _mesh1():
-    return jax.make_mesh((1,), ("x",), devices=jax.devices()[:1],
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((1,), ("x",), devices=jax.devices()[:1])
 
 
 MATRICES = {
@@ -81,3 +81,53 @@ def test_comm_bytes_accounting():
     zc = build_plan(a, 4, SolverConfig(block_size=16, comm="zerocopy"))
     un = build_plan(a, 4, SolverConfig(block_size=16, comm="unified"))
     assert zc.comm_bytes_per_solve < un.comm_bytes_per_solve
+
+
+def test_comm_bytes_syncfree_counts_counter_traffic():
+    """Syncfree/unified psums in-degree counters on top of the accumulators —
+    its predicted volume must exceed levelset/unified on the same matrix."""
+    a = MATRICES["levelled"]()
+    lv = build_plan(a, 4, SolverConfig(block_size=16, comm="unified", sched="levelset"))
+    sf = build_plan(a, 4, SolverConfig(block_size=16, comm="unified", sched="syncfree"))
+    assert sf.comm_bytes_per_solve > lv.comm_bytes_per_solve
+    assert lv.n_supersteps == lv.n_levels
+
+
+@pytest.mark.parametrize("sched", ["levelset", "syncfree"])
+def test_multirhs_panel_matches_columnwise(problem, sched):
+    """(n, R) panel through one compiled solve == R independent solves."""
+    a, b, x_ref = problem
+    rng = np.random.default_rng(7)
+    B = np.column_stack([b, rng.uniform(-1, 1, (a.n, 2))])
+    cfg = SolverConfig(block_size=16, sched=sched)
+    solver = DistributedSolver(build_plan(a, 1, cfg), _mesh1())
+    X = solver.solve(B)
+    assert solver.n_solves == 1
+    np.testing.assert_allclose(X[:, 0], x_ref, rtol=2e-4, atol=2e-4)
+    for j in range(1, 3):
+        np.testing.assert_allclose(X[:, j], reference_solve(a, B[:, j]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_transpose_solve_all_matrices(problem):
+    a, b, _ = problem
+    import scipy.sparse.linalg as spla
+
+    from repro.sparse.matrix import to_scipy
+
+    x = sptrsv(a, b, mesh=_mesh1(), config=SolverConfig(block_size=16), transpose=True)
+    x_ref = spla.spsolve_triangular(to_scipy(a).T.tocsr(), b, lower=False)
+    np.testing.assert_allclose(x, x_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_pallas_backend_multirhs_end_to_end():
+    """Whole multi-RHS solve with the Pallas trsm/gemm kernels (interpret)."""
+    a = suite.random_levelled(120, 10, 3.0, seed=5)
+    rng = np.random.default_rng(4)
+    B = rng.uniform(-1, 1, (a.n, 3))
+    cfg = SolverConfig(block_size=16, kernel_backend="pallas")
+    solver = DistributedSolver(build_plan(a, 1, cfg), _mesh1())
+    X = solver.solve(B)
+    for j in range(3):
+        np.testing.assert_allclose(X[:, j], reference_solve(a, B[:, j]),
+                                   rtol=2e-4, atol=2e-4)

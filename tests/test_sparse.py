@@ -1,5 +1,6 @@
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property suite is optional (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.sparse import suite

@@ -1,0 +1,50 @@
+"""Every Table-I suite entry must land in its declared structural regime.
+
+The suite generators are synthetic stand-ins for the paper's matrices; what
+they must preserve is the (levels, parallelism) *regime* that drives SpTRSV
+behaviour, not the exact counts. One classification rule is applied to both
+the declared paper signature and the measured signature at default scale:
+
+* embarrassingly-parallel — few wavefronts (levels <= 40)
+* chain-dominated         — parallelism below levels/5 (long critical path)
+* balanced                — everything else
+"""
+import numpy as np
+import pytest
+
+from repro.core.analysis import level_sets, metrics
+from repro.sparse.suite import table1_suite
+
+
+def _regime(levels: float, parallelism: float) -> str:
+    if levels <= 40:
+        return "embarrassingly-parallel"
+    if parallelism < levels / 5:
+        return "chain-dominated"
+    return "balanced"
+
+
+@pytest.mark.parametrize("entry", table1_suite(), ids=lambda e: e.name)
+def test_entry_lands_in_declared_regime(entry):
+    a = entry.build()
+    m = metrics(a, level_sets(a))
+    declared = _regime(entry.paper_levels, entry.paper_parallelism)
+    measured = _regime(m.n_levels, m.parallelism)
+    assert measured == declared, (
+        f"{entry.name}: declared {declared} "
+        f"(paper levels={entry.paper_levels}, par={entry.paper_parallelism}) but "
+        f"measured {measured} (levels={m.n_levels}, par={m.parallelism:.1f})"
+    )
+
+
+def test_suite_covers_all_three_regimes():
+    regimes = {_regime(e.paper_levels, e.paper_parallelism) for e in table1_suite()}
+    assert regimes == {"embarrassingly-parallel", "chain-dominated", "balanced"}
+
+
+def test_signatures_are_deterministic():
+    """Generators are seeded: the structural signature must not drift."""
+    for entry in table1_suite(0.05):
+        a1, a2 = entry.build(), entry.build()
+        assert a1.nnz == a2.nnz
+        np.testing.assert_array_equal(a1.col_idx, a2.col_idx)

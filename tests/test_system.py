@@ -2,6 +2,7 @@
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.core import SolverConfig, sptrsv
 from repro.sparse import suite
 from repro.sparse.matrix import reference_solve
@@ -10,7 +11,7 @@ from repro.sparse.matrix import reference_solve
 def _mesh1():
     import jax
 
-    return jax.make_mesh((1,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((1,), ("x",))
 
 
 def test_paper_pipeline_analyse_plan_solve():

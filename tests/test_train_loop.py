@@ -4,6 +4,7 @@ import os
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.checkpoint import CheckpointManager
 from repro.launch.train import run
 
@@ -62,7 +63,7 @@ def test_elastic_restore_different_topology(tmp_path):
     opt = {"m": {"w": jnp.zeros((4, 4))}, "v": {"w": jnp.zeros((4, 4))},
            "step": jnp.zeros((), jnp.int32)}
     mgr.save(0, params, opt, {"mesh": [1]})
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("data",))
     sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), params)
     osh = jax.tree.map(lambda _: NamedSharding(mesh, P()), opt)
     p2, _, _ = mgr.restore(0, params, opt, shardings=(sh, osh))
