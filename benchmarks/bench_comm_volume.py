@@ -4,6 +4,10 @@ The paper measures page faults from UM thrashing; the structural cause is
 cut-oblivious dense traffic. We report the predicted collective payload per
 solve (bytes) for 2/4/8 devices — no devices needed (plan-level analysis).
 Derived: volume ratio unified/zerocopy (the thrashing-elimination factor).
+
+The model reports the *executed* packed payload: each boundary row is pulled
+once at its level's bucket width (no global pad-to-max sentinel slots), and
+every single-device plan reports exactly 0 bytes — asserted below per entry.
 """
 from __future__ import annotations
 
@@ -15,13 +19,30 @@ from repro.sparse.suite import table1_suite
 def main() -> None:
     for entry in table1_suite(bench_scale()):
         a = entry.build()
+        # pad-slot bugfix regression: no devices -> no collectives -> 0 bytes
+        for sched in ("levelset", "syncfree"):
+            for comm in ("zerocopy", "unified"):
+                p1 = build_plan(a, 1, SolverConfig(block_size=16, comm=comm, sched=sched))
+                assert p1.comm_bytes_per_solve == 0, (
+                    entry.name, sched, comm, p1.comm_bytes_per_solve)
         for D in (2, 4, 8):
             un = build_plan(a, D, SolverConfig(block_size=16, comm="unified"))
             zc = build_plan(a, D, SolverConfig(block_size=16, comm="zerocopy",
                                                partition="taskpool"))
+            # volume model = executed packed payload: every boundary row pulled
+            # once (bucket slack included, pad-to-max sentinel slots gone)
+            assert zc.comm_bytes_per_solve >= zc.n_boundary_rows * zc.bs.B * 4
+            assert (zc.comm_bytes_per_solve == 0) == (zc.n_boundary_rows == 0)
             ratio = un.comm_bytes_per_solve / max(1, zc.comm_bytes_per_solve)
             emit(f"fig3/{entry.name}/{D}dev", float(zc.comm_bytes_per_solve),
                  f"unified_over_zerocopy={ratio:.1f}")
+            # malleable partition: cost-aware placement shrinks the cut itself
+            ml = build_plan(a, D, SolverConfig(block_size=16, comm="zerocopy",
+                                               partition="malleable"))
+            ml_ratio = zc.comm_bytes_per_solve / max(1, ml.comm_bytes_per_solve)
+            emit(f"fig3/{entry.name}/{D}dev/malleable",
+                 float(ml.comm_bytes_per_solve),
+                 f"taskpool_over_malleable={ml_ratio:.1f}")
             # corrected syncfree figure: unified/syncfree also psums the
             # in-degree counters every superstep ((B+1)-wide rows)
             un_sf = build_plan(a, D, SolverConfig(block_size=16, comm="unified",

@@ -1,6 +1,7 @@
 """Krylov workload bench: SpTRSV as the hot path of preconditioned solves.
 
-Sweeps (suite matrix) x (comm mode) x (RHS batch width) for IC(0)-PCG on the
+Sweeps (suite matrix) x (comm mode / partition strategy) x (RHS batch width)
+for IC(0)-PCG on the
 SPD expansion of each factor. All three distributed executables (SpMV, L
 solve, L^T solve) are planned and compiled ONCE per (matrix, comm) cell and
 reused for the warm-up and the timed run — so the timed figure is the paper's
@@ -41,8 +42,9 @@ def main() -> None:
     for entry in [e for e in table1_suite(bench_scale()) if e.name in FOCUS]:
         a = spd_lower_from_triangular(entry.build())
         rng = np.random.default_rng(0)
-        for comm in ("zerocopy", "unified"):
-            cfg = SolverConfig(block_size=16, comm=comm, partition="taskpool")
+        for comm, partition in (("zerocopy", "taskpool"), ("zerocopy", "malleable"),
+                                ("unified", "taskpool")):
+            cfg = SolverConfig(block_size=16, comm=comm, partition=partition)
             plan = build_plan(a, D, cfg)
             spmv = DistributedSpMV(plan, mesh)
             psolve, handles = make_ic0_preconditioner(a, mesh=mesh, config=cfg,
@@ -57,8 +59,9 @@ def main() -> None:
                 dt = time.perf_counter() - t0
                 iters = max(1, res.n_iters)
                 us_iter = dt / iters * 1e6
+                cell = comm if partition == "taskpool" else f"{comm}+{partition}"
                 emit(
-                    f"krylov/{entry.name}/{comm}/{D}dev/rhs{R}", us_iter,
+                    f"krylov/{entry.name}/{cell}/{D}dev/rhs{R}", us_iter,
                     f"iters={res.n_iters};trsv_calls="
                     f"{fwd.n_solves + bwd.n_solves - calls0};"
                     f"us_per_system_iter={us_iter / R:.1f}",

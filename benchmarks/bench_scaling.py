@@ -2,6 +2,8 @@
 
 Normalized (derived column) to the single-device level-set solver — the
 paper's cusparse_csrsv2 analogue. Total tasks fixed at 32 (paper §VI-D).
+Each device count runs both the round-robin ``taskpool`` and the cost-model
+``malleable`` partition (``.../malleable`` rows).
 """
 from __future__ import annotations
 
@@ -36,12 +38,15 @@ def main() -> None:
             if D > max_d or D > len(jax.devices()):
                 continue
             total_tasks = 32
-            cfg = SolverConfig(block_size=16, comm="zerocopy", partition="taskpool",
-                               tasks_per_device=max(1, total_tasks // D))
             mesh = compat.make_mesh((D,), ("x",), devices=jax.devices()[:D])
-            solver = DistributedSolver(build_plan(a, D, cfg), mesh)
-            us = time_call(solver.solve_blocks, b)
-            emit(f"fig10/{entry.name}/{D}dev", us, f"speedup_vs_1dev={base_us/us:.2f}")
+            for strategy in ("taskpool", "malleable"):
+                cfg = SolverConfig(block_size=16, comm="zerocopy", partition=strategy,
+                                   tasks_per_device=max(1, total_tasks // D))
+                solver = DistributedSolver(build_plan(a, D, cfg), mesh)
+                us = time_call(solver.solve_blocks, b)
+                suffix = "" if strategy == "taskpool" else f"/{strategy}"
+                emit(f"fig10/{entry.name}/{D}dev{suffix}", us,
+                     f"speedup_vs_1dev={base_us/us:.2f}")
 
 
 if __name__ == "__main__":

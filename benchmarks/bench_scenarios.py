@@ -1,10 +1,12 @@
 """Paper Fig. 7: SpTRSV design scenarios on 4 devices.
 
-Scenarios (exact analogues of the paper's four bars, DESIGN.md §5.2):
+Scenarios (exact analogues of the paper's four bars, DESIGN.md §5.2, plus the
+malleable cost-model partition on top of the zero-copy exchange):
   unified            4GPU-Unified        dense all-reduce/superstep, contiguous
   unified+task       4GPU-Unified+8task  dense exchange + task-pool partition
   shmem              4GPU-Shmem          packed boundary exchange, contiguous
   zerocopy           4GPU-Zerocopy       packed exchange + task-pool (8 tasks)
+  malleable          (this repo)         packed exchange + cost-model partition
 
 Derived column: speedup over `unified` (the paper's normalization).
 """
@@ -25,6 +27,8 @@ SCENARIOS = {
     "shmem": SolverConfig(block_size=16, comm="zerocopy", partition="contiguous"),
     "zerocopy": SolverConfig(block_size=16, comm="zerocopy", partition="taskpool",
                              tasks_per_device=8),
+    "malleable": SolverConfig(block_size=16, comm="zerocopy", partition="malleable",
+                              tasks_per_device=8),
 }
 
 

@@ -1,7 +1,10 @@
 """Paper Fig. 9: sensitivity to tasks-per-device (zerocopy, 4 devices).
 
-Derived column: performance normalized to the 4-tasks/device case (paper's
-normalization), i.e. ``t_4task / t_this``.
+Swept for both the paper's round-robin ``taskpool`` and the cost-model
+``malleable`` partition (where ``tasks_per_device`` bounds the number of
+adaptive tasks carved per level). Derived column: performance normalized to
+the 4-tasks/device case of the same strategy (paper's normalization), i.e.
+``t_4task / t_this``.
 """
 from __future__ import annotations
 
@@ -14,6 +17,7 @@ from repro.core.blocking import pad_rhs
 from repro.sparse.suite import table1_suite
 
 TASKS = [1, 2, 4, 8, 16, 32]
+STRATEGIES = ("taskpool", "malleable")
 
 
 def main() -> None:
@@ -28,15 +32,17 @@ def main() -> None:
         a = entry.build()
         b = jnp.asarray(pad_rhs(np.random.default_rng(0).uniform(-1, 1, a.n),
                                 build_plan(a, 1, SolverConfig(block_size=16)).bs))
-        results = {}
-        for t in TASKS:
-            cfg = SolverConfig(block_size=16, comm="zerocopy", partition="taskpool",
-                               tasks_per_device=t)
-            solver = DistributedSolver(build_plan(a, D, cfg), mesh)
-            results[t] = time_call(solver.solve_blocks, b)
-        for t in TASKS:
-            emit(f"fig9/{entry.name}/tasks{t}", results[t],
-                 f"norm_vs_4task={results[4] / results[t]:.2f}")
+        for strategy in STRATEGIES:
+            results = {}
+            for t in TASKS:
+                cfg = SolverConfig(block_size=16, comm="zerocopy", partition=strategy,
+                                   tasks_per_device=t)
+                solver = DistributedSolver(build_plan(a, D, cfg), mesh)
+                results[t] = time_call(solver.solve_blocks, b)
+            suffix = "" if strategy == "taskpool" else f"/{strategy}"
+            for t in TASKS:
+                emit(f"fig9/{entry.name}/tasks{t}{suffix}", results[t],
+                     f"norm_vs_4task={results[4] / results[t]:.2f}")
 
 
 if __name__ == "__main__":

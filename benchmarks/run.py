@@ -13,10 +13,18 @@ Multi-device sections run in subprocesses with forced host device counts.
 ``REPRO_BENCH_FAST=1`` (or ``--quick``) runs a reduced set for CI-style smoke
 runs.
 
-  krylov  IC(0)-PCG iteration cost, suite x comm x RHS batch
+Besides the CSV on stdout, every run writes ``BENCH_PR2.json`` — a
+machine-readable ``{name: {"us_per_call": float, "derived": str}}`` map of the
+same rows (CI uploads it as an artifact, so the perf trajectory is diffable
+across PRs).
+
+  krylov  IC(0)-PCG iteration cost, suite x comm/partition x RHS batch
 """
 from __future__ import annotations
 
+import contextlib
+import io
+import json
 import os
 import sys
 
@@ -26,38 +34,76 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks.common import run_with_devices  # noqa: E402
 
 
+class _Tee(io.TextIOBase):
+    """Mirror writes to the real stdout while recording them for the JSON dump."""
+
+    def __init__(self, stream):
+        self.stream = stream
+        self.buffer_text = io.StringIO()
+
+    def write(self, s: str) -> int:
+        self.buffer_text.write(s)
+        return self.stream.write(s)
+
+    def flush(self) -> None:
+        self.stream.flush()
+
+
+def rows_from_csv(text: str) -> dict:
+    """Parse ``name,us_per_call,derived`` lines into the JSON row map."""
+    rows = {}
+    for line in text.splitlines():
+        parts = line.strip().split(",", 2)
+        if len(parts) < 2 or parts[0] in ("", "name"):
+            continue
+        try:
+            us = float(parts[1])
+        except ValueError:
+            continue
+        rows[parts[0]] = {"us_per_call": us,
+                          "derived": parts[2] if len(parts) > 2 else ""}
+    return rows
+
+
 def main() -> None:
-    print("name,us_per_call,derived")
-    fast = os.environ.get("REPRO_BENCH_FAST", "0") == "1" or "--quick" in sys.argv[1:]
-    scale = os.environ.get("REPRO_BENCH_SCALE", "0.05" if fast else "0.1")
-    env = {"REPRO_BENCH_SCALE": scale}
+    tee = _Tee(sys.stdout)
+    with contextlib.redirect_stdout(tee):
+        print("name,us_per_call,derived")
+        fast = os.environ.get("REPRO_BENCH_FAST", "0") == "1" or "--quick" in sys.argv[1:]
+        scale = os.environ.get("REPRO_BENCH_SCALE", "0.05" if fast else "0.1")
+        env = {"REPRO_BENCH_SCALE": scale}
 
-    # plan-level analysis (no devices)
-    from benchmarks import bench_comm_volume, bench_interconnect_model
+        # plan-level analysis (no devices)
+        from benchmarks import bench_comm_volume, bench_interconnect_model
 
-    bench_comm_volume.main()
-    bench_interconnect_model.main()
+        bench_comm_volume.main()
+        bench_interconnect_model.main()
 
-    # multi-device sections (subprocess with forced device count)
-    print(run_with_devices("benchmarks.bench_scenarios", 4, env), end="")
-    if not fast:
-        print(run_with_devices("benchmarks.bench_krylov", 4, env), end="")
-        print(run_with_devices("benchmarks.bench_tasks", 4, env), end="")
-        print(run_with_devices("benchmarks.bench_scaling", 8, env), end="")
-        print(run_with_devices("benchmarks.bench_lm_step", 1, env), end="")
+        # multi-device sections (subprocess with forced device count)
+        print(run_with_devices("benchmarks.bench_scenarios", 4, env), end="")
+        if not fast:
+            print(run_with_devices("benchmarks.bench_krylov", 4, env), end="")
+            print(run_with_devices("benchmarks.bench_tasks", 4, env), end="")
+            print(run_with_devices("benchmarks.bench_scaling", 8, env), end="")
+            print(run_with_devices("benchmarks.bench_lm_step", 1, env), end="")
 
-    # roofline table from dry-run artifacts, if the sweep has run
-    if os.path.isdir("experiments/dryrun"):
-        from benchmarks import roofline
+        # roofline table from dry-run artifacts, if the sweep has run
+        if os.path.isdir("experiments/dryrun"):
+            from benchmarks import roofline
 
-        rows = [r for r in map(roofline.roofline_row, roofline.load_cells()) if r]
-        for r in rows:
-            name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
-            derived = (
-                f"bottleneck={r['bottleneck']};frac={r['roofline_fraction']:.2f};"
-                f"useful={r['useful_flops_ratio']:.2f}"
-            )
-            print(f"{name},{r['bound_s']*1e6:.1f},{derived}")
+            rows = [r for r in map(roofline.roofline_row, roofline.load_cells()) if r]
+            for r in rows:
+                name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+                derived = (
+                    f"bottleneck={r['bottleneck']};frac={r['roofline_fraction']:.2f};"
+                    f"useful={r['useful_flops_ratio']:.2f}"
+                )
+                print(f"{name},{r['bound_s']*1e6:.1f},{derived}")
+
+    out = os.environ.get("REPRO_BENCH_JSON", "BENCH_PR2.json")
+    with open(out, "w") as f:
+        json.dump(rows_from_csv(tee.buffer_text.getvalue()), f, indent=1, sort_keys=True)
+    sys.stderr.write(f"[bench] wrote {out}\n")
 
 
 if __name__ == "__main__":

@@ -31,6 +31,7 @@ for name, cfg in {
     "unified (UM analogue)": SolverConfig(comm="unified", partition="contiguous"),
     "shmem (zerocopy, contiguous)": SolverConfig(comm="zerocopy", partition="contiguous"),
     "zerocopy + task pool": SolverConfig(comm="zerocopy", partition="taskpool"),
+    "zerocopy + malleable cost model": SolverConfig(comm="zerocopy", partition="malleable"),
     "sync-free runtime frontier": SolverConfig(comm="zerocopy", sched="syncfree"),
 }.items():
     x = sptrsv(a, b, mesh=mesh, config=cfg)

@@ -1,6 +1,6 @@
 """Workload partitioning across devices — the paper's task-pool model (§V).
 
-Two strategies over *block rows* (the schedulable unit, DESIGN.md §2):
+Three strategies over *block rows* (the schedulable unit, DESIGN.md §2):
 
 * ``contiguous`` — the paper's baseline: block-rows split into D consecutive
   ranges. Dependencies become unidirectional (device d always waits on
@@ -8,6 +8,15 @@ Two strategies over *block rows* (the schedulable unit, DESIGN.md §2):
 * ``taskpool``   — the paper's contribution: block-rows grouped into *tasks* of
   ``task_size`` consecutive block-rows, dealt **round-robin** to devices.
   ``tasks_per_device`` is the paper's tunable (Fig. 9 sensitivity).
+* ``malleable``  — cost-model-driven task pool (paper Fig. 9 direction, plus
+  the elasticity line of work): per-block-row cost = diagonal solve + the tile
+  updates computed where that block column lives; each *level* is chopped into
+  tasks of adaptive size (equal cost, not equal row count) and the tasks are
+  placed greedily, largest first (LPT), onto the least-loaded device of that
+  level. Ties within a small load slack go to the device that already owns the
+  most predecessor tiles, keeping the boundary cut small. Because placement is
+  per level, every wavefront is balanced by construction instead of relying on
+  the round-robin deal to scatter a level's rows evenly.
 
 Also computes the *cut statistics* that drive the zero-copy exchange: a block
 row is a **boundary row** iff some tile in that row lives in a column owned by
@@ -21,17 +30,97 @@ import numpy as np
 
 from repro.core.blocking import BlockStructure
 
+STRATEGIES = ("contiguous", "taskpool", "malleable")
+
 
 @dataclasses.dataclass(frozen=True)
 class Partition:
     n_devices: int
-    strategy: str  # "contiguous" | "taskpool"
+    strategy: str  # one of STRATEGIES
     tasks_per_device: int
     owner: np.ndarray  # (nb,) device owning each block row (and block column)
     boundary: np.ndarray  # (nb,) bool: row receives updates from a remote device
 
     def local_rows(self, d: int) -> np.ndarray:
         return np.nonzero(self.owner == d)[0].astype(np.int32)
+
+
+def block_row_cost(bs: BlockStructure) -> np.ndarray:
+    """Per-block-row work in block-op units: one B×B TRSV for the diagonal
+    solve plus one B×B GEMV per tile in the row's *column* (tiles live on their
+    column's owner, so owning row r means computing column r's updates). GEMV
+    moves ~2x the flops of the triangular solve at equal B."""
+    return 1.0 + 2.0 * np.bincount(bs.off_cols, minlength=bs.nb)
+
+
+def _malleable_owner(
+    bs: BlockStructure, n_devices: int, tasks_per_device: int
+) -> np.ndarray:
+    nb, D = bs.nb, n_devices
+    owner = np.full(nb, -1, dtype=np.int32)
+    cost = block_row_cost(bs)
+    lvl = bs.block_level
+    # row -> predecessor block-columns (CSR over tiles), for placement affinity
+    order = np.argsort(bs.off_rows, kind="stable")
+    pre_cols = bs.off_cols[order]
+    pre_ptr = np.zeros(nb + 1, dtype=np.int64)
+    np.cumsum(np.bincount(bs.off_rows, minlength=nb), out=pre_ptr[1:])
+
+    for t in range(bs.n_block_levels):
+        rows_t = np.nonzero(lvl == t)[0]  # ascending: consecutive rows cluster
+        if rows_t.size == 0:
+            continue
+        # malleable task sizing: chop the level into exactly n_tasks contiguous
+        # tasks of (approximately) equal COST — dense rows travel alone, sparse
+        # rows pool together. The target is re-derived from the remaining cost
+        # so one oversized row cannot starve the trailing tasks.
+        size = int(rows_t.size)
+        n_tasks = int(min(size, D * tasks_per_device))
+        level_cost = cost[rows_t]
+        remaining = float(level_cost.sum())
+        tasks = []
+        i = 0
+        for k in range(n_tasks):
+            tgt = remaining / (n_tasks - k)
+            j = i
+            acc = 0.0
+            # leave at least one row for each task still to be formed
+            cap = size - (n_tasks - k - 1)
+            while j < cap and (j == i or acc < tgt):
+                acc += level_cost[j]
+                j += 1
+            tasks.append(rows_t[i:j])
+            remaining -= acc
+            i = j
+        if i < size:  # numerical slack: sweep leftovers into the last task
+            tasks[-1] = rows_t[i - tasks[-1].size:]
+        task_cost = np.array([cost[tk].sum() for tk in tasks])
+
+        # LPT within the level: heaviest task -> least-loaded device. Within a
+        # small load slack of the minimum, prefer (fewest rows this level, most
+        # owned predecessor tiles) — count balance is the metric the wavefront
+        # pays for, the affinity term keeps the boundary cut small.
+        load = np.zeros(D)
+        rows_of = np.zeros(D, dtype=np.int64)
+        slack = 0.25 * task_cost.mean()
+        for i in np.argsort(task_cost, kind="stable")[::-1]:
+            tk = tasks[i]
+            cand = np.nonzero(load <= load.min() + slack)[0]
+            if cand.size > 1:
+                cand = cand[rows_of[cand] == rows_of[cand].min()]
+            if cand.size > 1:
+                pre = np.concatenate(
+                    [pre_cols[pre_ptr[r]:pre_ptr[r + 1]] for r in tk]
+                ).astype(np.int64)
+                own = owner[pre] if pre.size else np.empty(0, np.int32)
+                own = own[own >= 0]
+                aff = np.bincount(own, minlength=D) if own.size else np.zeros(D, np.int64)
+                cand = cand[aff[cand] == aff[cand].max()]
+            d = cand[np.argmin(load[cand])]
+            owner[tk] = d
+            load[d] += task_cost[i]
+            rows_of[d] += tk.size
+    return owner
 
 
 def make_partition(
@@ -50,8 +139,11 @@ def make_partition(
         task_size = max(1, -(-nb // n_tasks))
         task_of = np.arange(nb) // task_size
         owner = (task_of % n_devices).astype(np.int32)  # round-robin deal (paper §V)
+    elif strategy == "malleable":
+        owner = _malleable_owner(bs, n_devices, tasks_per_device)
     else:
-        raise ValueError(f"unknown partition strategy: {strategy}")
+        raise ValueError(f"unknown partition strategy: {strategy!r} "
+                         f"(expected one of {STRATEGIES})")
 
     boundary = np.zeros(nb, dtype=bool)
     remote = owner[bs.off_cols] != owner[bs.off_rows]
@@ -71,13 +163,15 @@ class CutStats:
     remote_tiles: int
     remote_tile_fraction: float
     level_imbalance: float  # mean over levels of max_dev_rows / mean_dev_rows
+    level_cost_imbalance: float  # same, weighted by the block-row cost model
 
 
 def cut_stats(bs: BlockStructure, part: Partition) -> CutStats:
     remote = part.owner[bs.off_cols] != part.owner[bs.off_rows]
     n_levels = bs.n_block_levels
-    # per-level, per-device row counts
-    imb = []
+    cost = block_row_cost(bs)
+    # per-level, per-device row counts and cost loads
+    imb, cimb = [], []
     for t in range(n_levels):
         rows_t = np.nonzero(bs.block_level == t)[0]
         if rows_t.size == 0:
@@ -86,10 +180,15 @@ def cut_stats(bs: BlockStructure, part: Partition) -> CutStats:
         mean = counts.mean()
         if mean > 0:
             imb.append(counts.max() / mean)
+        loads = np.bincount(part.owner[rows_t], weights=cost[rows_t],
+                            minlength=part.n_devices)
+        if loads.mean() > 0:
+            cimb.append(loads.max() / loads.mean())
     return CutStats(
         boundary_rows=int(part.boundary.sum()),
         boundary_fraction=float(part.boundary.mean()),
         remote_tiles=int(remote.sum()),
         remote_tile_fraction=float(remote.mean()) if remote.size else 0.0,
         level_imbalance=float(np.mean(imb)) if imb else 1.0,
+        level_cost_imbalance=float(np.mean(cimb)) if cimb else 1.0,
     )

@@ -23,6 +23,17 @@ Scheduling modes:
 * ``syncfree`` — no level analysis; runtime in-degree counters discover the
   frontier each superstep (the paper's synchronization-free algorithm,
   bulk-synchronous TPU adaptation).
+
+Compacted schedules
+-------------------
+Levelset schedules are stored *ragged*: one flat array per schedule
+(``solve_rows``, ``upd_tiles``, ``ex_rows``) plus per-level offsets
+(``lvl_off``). Each level's slice is padded only up to a *bucket width* drawn
+from a small ladder (``Plan.buckets``), and the executor compiles one superstep
+body per occurring bucket combo, dispatched with ``lax.switch`` — so a level
+with 3 rows costs a width-4 superstep instead of the global max width, cutting
+the wasted pad flops and pad exchange bytes that a dense ``(T, max)`` layout
+burns on skewed level-size distributions.
 """
 from __future__ import annotations
 
@@ -41,13 +52,15 @@ from repro.sparse.matrix import CSR, reverse_transpose
 
 AXIS = "x"  # device axis name used by the solver
 
+MAX_BUCKETS = 12  # cap on distinct (solve, update, exchange) width combos
+
 
 @dataclasses.dataclass(frozen=True)
 class SolverConfig:
     block_size: int = 32
     comm: str = "zerocopy"  # "zerocopy" | "unified"
     sched: str = "levelset"  # "levelset" | "syncfree"
-    partition: str = "taskpool"  # "taskpool" | "contiguous"
+    partition: str = "taskpool"  # "taskpool" | "contiguous" | "malleable"
     tasks_per_device: int = 8
     kernel_backend: str | None = None  # None -> ops default ("reference" on CPU)
     gemv_group: int = 0
@@ -66,11 +79,15 @@ class Plan:
     diag: np.ndarray  # (nb+1, B, B) identity at pad slot
     owner: np.ndarray  # (nb+1,) int32, -1 at pad
     indeg: np.ndarray  # (nb+1,) int32 tile in-degree per block row
-    ex_levels: np.ndarray  # (T, ME) rows exchanged before level t (levelset/zerocopy)
-    ex_boundary: np.ndarray  # (MEB,) static boundary row list (syncfree/zerocopy)
+    ex_rows: np.ndarray  # (E,) ragged rows exchanged per level (levelset/zerocopy)
+    ex_boundary: np.ndarray  # (n_boundary or 1,) boundary rows (syncfree/zerocopy)
+    # ragged levelset schedules: flat arrays + per-level offsets + width buckets
+    lvl_off: np.ndarray  # (T, 3) int32 start of level t in (solve, upd, ex) flats
+    lvl_bucket: np.ndarray  # (T,) int32 index into `buckets`
+    buckets: tuple  # ((ws, wu, we), ...) level widths, small set (<= MAX_BUCKETS)
     # sharded by leading device axis
-    solve_rows: np.ndarray  # (D, T, MS) owned rows per level, pad -1 (levelset)
-    upd_tiles: np.ndarray  # (D, T, MU) local tile ids per level, pad ML (levelset)
+    solve_rows: np.ndarray  # (D, S) ragged owned rows per level, pad -1 (levelset)
+    upd_tiles: np.ndarray  # (D, U) ragged local tile ids per level, pad ML (levelset)
     local_rows: np.ndarray  # (D, MLR) owned rows, pad nb (syncfree)
     tile_row: np.ndarray  # (D, ML+1) dest block-row per local tile, pad nb
     tile_col: np.ndarray  # (D, ML+1) src block-col per local tile, pad nb
@@ -86,8 +103,20 @@ class Plan:
         return self.n_levels
 
     @property
+    def n_boundary_rows(self) -> int:
+        """Block rows that receive updates from a remote device."""
+        return int(self.part.boundary.sum())
+
+    @property
     def comm_bytes_per_solve(self) -> int:
-        """Predicted collective payload bytes for one solve (one device's share)."""
+        """Predicted collective payload bytes for one solve (one device's
+        share) — the payload the executors actually put on the wire. The old
+        global pad-to-max sentinel slots are gone (each boundary row is pulled
+        once, at its level's *bucket* width, so only the bucket slack rides
+        along), and single-device plans — which execute no collectives at
+        all — report exactly 0."""
+        if self.n_devices == 1:
+            return 0
         B = self.bs.B
         itemsize = 4
         if self.config.comm == "unified":
@@ -96,8 +125,53 @@ class Plan:
             width = B if self.config.sched == "levelset" else B + 1
             return (self.bs.nb + 1) * width * itemsize * self.n_supersteps
         if self.config.sched == "levelset":
-            return int(self.ex_levels.size) * B * itemsize
-        return int(self.ex_boundary.size) * (B + 1) * itemsize * self.n_supersteps
+            # each boundary row is exchanged exactly once, before its level;
+            # levels with an empty cut skip the psum entirely (width 0)
+            if self.n_boundary_rows == 0:
+                return 0
+            ex_width = np.asarray(self.buckets, dtype=np.int64)[self.lvl_bucket, 2]
+            return int(ex_width.sum()) * B * itemsize
+        return self.n_boundary_rows * (B + 1) * itemsize * self.n_supersteps
+
+
+def _round_up_to(w: np.ndarray, base: int) -> np.ndarray:
+    """Round each width up to the next power of ``base`` (0 stays 0)."""
+    out = np.ones_like(w)
+    while np.any(out < w):
+        out = np.where(out < w, out * base, out)
+    return np.where(w == 0, 0, out)
+
+
+def _bucketize_levels(
+    ws: np.ndarray, wu: np.ndarray, we: np.ndarray
+) -> tuple[tuple, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Choose the per-level padded widths for the three ragged schedules.
+
+    Widths round up a geometric ladder; the ladder coarsens (base 2 -> 4 -> 16)
+    until the number of distinct (ws, wu, we) combos fits MAX_BUCKETS, and in
+    the worst case degenerates to the single global-max bucket (the old dense
+    layout). Returns (buckets, bucket_id, bws, bwu, bwe).
+    """
+    T = ws.shape[0]
+    if T == 0:
+        z = np.zeros(0, dtype=np.int64)
+        return ((1, 0, 0),), np.zeros(0, np.int32), z, z, z
+    for base in (2, 4, 16, 0):
+        if base:
+            bws, bwu, bwe = (_round_up_to(w, base) for w in (ws, wu, we))
+        else:  # fallback: one global bucket per schedule (pad-to-max)
+            bws, bwu, bwe = (
+                np.where(w == 0, 0, max(1, int(w.max()))) for w in (ws, wu, we)
+            )
+        combos = np.unique(np.stack([bws, bwu, bwe], axis=1), axis=0)
+        if combos.shape[0] <= MAX_BUCKETS:
+            break
+    key = {tuple(int(v) for v in c): i for i, c in enumerate(combos)}
+    bucket_id = np.array(
+        [key[(int(bws[t]), int(bwu[t]), int(bwe[t]))] for t in range(T)], np.int32
+    )
+    buckets = tuple(tuple(int(v) for v in c) for c in combos)
+    return buckets, bucket_id, bws.astype(np.int64), bwu.astype(np.int64), bwe.astype(np.int64)
 
 
 def build_plan(
@@ -140,35 +214,43 @@ def build_plan(
         tile_col[d, :k] = bs.off_cols[ids]
         local_tile_id[ids] = np.arange(k)
 
-    # --- levelset plan ---
+    # --- compacted levelset schedules (ragged flats + width buckets) ---
     lvl = bs.block_level
     rows_by = [[np.nonzero((part.owner == d) & (lvl == t))[0] for t in range(T)] for d in range(D)]
-    MS = max((r.shape[0] for dev in rows_by for r in dev), default=1) or 1
-    solve_rows = np.full((D, T, MS), -1, dtype=np.int32)
-    for d in range(D):
-        for t in range(T):
-            r = rows_by[d][t]
-            solve_rows[d, t, : r.shape[0]] = r
-
     col_lvl = lvl[bs.off_cols]
     tiles_by = [
         [np.nonzero((tile_dev == d) & (col_lvl == t))[0] for t in range(T)] for d in range(D)
     ]
-    MU = max((t.shape[0] for dev in tiles_by for t in dev), default=1) or 1
-    upd_tiles = np.full((D, T, MU), ML, dtype=np.int32)
-    for d in range(D):
-        for t in range(T):
-            ids = tiles_by[d][t]
-            upd_tiles[d, t, : ids.shape[0]] = local_tile_id[ids]
-
-    # --- exchange lists ---
     b_rows = np.nonzero(part.boundary)[0]
     ex_by_level = [b_rows[lvl[b_rows] == t] for t in range(T)]
-    ME = max((e.shape[0] for e in ex_by_level), default=1) or 1
-    ex_levels = np.full((T, ME), nb, dtype=np.int32)
+
+    # per-level required widths (max over devices for the sharded schedules)
+    ws = np.array([max(rows_by[d][t].shape[0] for d in range(D)) for t in range(T)],
+                  dtype=np.int64) if T else np.zeros(0, np.int64)
+    wu = np.array([max(tiles_by[d][t].shape[0] for d in range(D)) for t in range(T)],
+                  dtype=np.int64) if T else np.zeros(0, np.int64)
+    we = np.array([e.shape[0] for e in ex_by_level], dtype=np.int64)
+    buckets, lvl_bucket, bws, bwu, bwe = _bucketize_levels(ws, wu, we)
+
+    lvl_off = np.zeros((T, 3), dtype=np.int32)
+    if T:
+        lvl_off[:, 0] = np.concatenate([[0], np.cumsum(bws)[:-1]])
+        lvl_off[:, 1] = np.concatenate([[0], np.cumsum(bwu)[:-1]])
+        lvl_off[:, 2] = np.concatenate([[0], np.cumsum(bwe)[:-1]])
+    S = max(1, int(bws.sum())) if T else 1
+    U = max(1, int(bwu.sum())) if T else 1
+    E = max(1, int(bwe.sum())) if T else 1
+    solve_rows = np.full((D, S), -1, dtype=np.int32)
+    upd_tiles = np.full((D, U), ML, dtype=np.int32)
+    ex_rows = np.full((E,), nb, dtype=np.int32)
     for t in range(T):
+        for d in range(D):
+            r = rows_by[d][t]
+            solve_rows[d, lvl_off[t, 0]: lvl_off[t, 0] + r.shape[0]] = r
+            ids = tiles_by[d][t]
+            upd_tiles[d, lvl_off[t, 1]: lvl_off[t, 1] + ids.shape[0]] = local_tile_id[ids]
         e = ex_by_level[t]
-        ex_levels[t, : e.shape[0]] = e
+        ex_rows[lvl_off[t, 2]: lvl_off[t, 2] + e.shape[0]] = e
     ex_boundary = b_rows.astype(np.int32) if b_rows.size else np.full((1,), nb, dtype=np.int32)
 
     # --- syncfree plan ---
@@ -180,11 +262,78 @@ def build_plan(
 
     return Plan(
         bs=bs, part=part, config=config, n_devices=D, n_levels=T,
-        diag=diag, owner=owner, indeg=indeg, ex_levels=ex_levels,
-        ex_boundary=ex_boundary, solve_rows=solve_rows, upd_tiles=upd_tiles,
+        diag=diag, owner=owner, indeg=indeg, ex_rows=ex_rows,
+        ex_boundary=ex_boundary, lvl_off=lvl_off, lvl_bucket=lvl_bucket,
+        buckets=buckets, solve_rows=solve_rows, upd_tiles=upd_tiles,
         local_rows=local_rows, tile_row=tile_row, tile_col=tile_col, tiles=tiles,
         transpose=transpose,
     )
+
+
+# ---------------------------------------------------------------------------
+# compacted levelset superstep (shared by local/distributed executors)
+# ---------------------------------------------------------------------------
+
+
+def _compact_level_body(
+    plan: Plan, sr, ut, trow, tcol, tiles, diag, b_pad, ex, split_delta=False
+):
+    """Return the compacted superstep body shared by all levelset executors.
+
+    One branch is built per occurring width-bucket combo and dispatched with
+    ``lax.switch`` on the level's bucket id; each branch slices its level's
+    rows/tiles at the bucket width (static sizes, dynamic offsets), so the
+    solve/update/exchange work scales with the level's bucket instead of the
+    global max. ``ex is None`` disables the zero-copy boundary pull.
+
+    Carry is ``(acc, x)``, or ``(acc, delta, x)`` with ``split_delta`` — then
+    solves read ``acc`` but tile updates land in ``delta`` (the unified
+    executor's not-yet-exchanged contributions; incompatible with ``ex``).
+    """
+    assert not (split_delta and ex is not None)
+    cfg = plan.config
+    nb = plan.bs.nb
+    off = jnp.asarray(plan.lvl_off)
+    bucket_id = jnp.asarray(plan.lvl_bucket)
+
+    def make_branch(w_s: int, w_u: int, w_e: int):
+        def branch(t, carry):
+            if split_delta:
+                acc, delta, x = carry
+            else:
+                acc, x = carry
+            if ex is not None and w_e > 0:
+                # lazy exactly-once pull: combine partial accumulators for the
+                # boundary rows of THIS level right before solving them
+                rows = jax.lax.dynamic_slice(ex, (off[t, 2],), (w_e,))
+                acc = acc.at[rows].set(jax.lax.psum(acc[rows], AXIS))
+            if w_s > 0:
+                rows = jax.lax.dynamic_slice(sr, (off[t, 0],), (w_s,))
+                safe = jnp.where(rows < 0, nb, rows)
+                xs = ops.batched_block_trsv(
+                    diag[safe], b_pad[safe] - acc[safe], backend=cfg.kernel_backend
+                )
+                x = x.at[safe].set(
+                    jnp.where(ops.bcast_trailing(rows >= 0, xs), xs, x[safe])
+                )
+            if w_u > 0:
+                tids = jax.lax.dynamic_slice(ut, (off[t, 1],), (w_u,))
+                prods = ops.batched_block_gemv(
+                    tiles[tids], x[tcol[tids]], backend=cfg.kernel_backend,
+                    group=cfg.gemv_group,
+                )
+                if split_delta:
+                    delta = delta.at[trow[tids]].add(prods)
+                else:
+                    acc = acc.at[trow[tids]].add(prods)
+            return (acc, delta, x) if split_delta else (acc, x)
+
+        return branch
+
+    branches = [make_branch(*b) for b in plan.buckets]
+    if len(branches) == 1:
+        return lambda t, carry: branches[0](t, carry)
+    return lambda t, carry: jax.lax.switch(bucket_id[t], branches, t, carry)
 
 
 # ---------------------------------------------------------------------------
@@ -194,33 +343,17 @@ def build_plan(
 
 def solve_local(plan: Plan, b_blocks: jax.Array) -> jax.Array:
     """Level-scheduled solve on one device. b_blocks: (nb, B) -> x (nb, B)."""
-    cfg = plan.config
-    nb, B = plan.bs.nb, plan.bs.B
+    nb = plan.bs.nb
     diag = jnp.asarray(plan.diag)
-    sr = jnp.asarray(plan.solve_rows.reshape(-1, plan.solve_rows.shape[-1]))  # D=1
-    ut = jnp.asarray(plan.upd_tiles.reshape(-1, plan.upd_tiles.shape[-1]))
+    sr = jnp.asarray(plan.solve_rows[0])
+    ut = jnp.asarray(plan.upd_tiles[0])
     trow = jnp.asarray(plan.tile_row[0])
     tcol = jnp.asarray(plan.tile_col[0])
     tiles = jnp.asarray(plan.tiles[0])
     b_pad = jnp.concatenate(
         [b_blocks, jnp.zeros((1,) + b_blocks.shape[1:], b_blocks.dtype)]
     )
-
-    def body(t, carry):
-        acc, x = carry
-        rows = jax.lax.dynamic_index_in_dim(sr, t, 0, keepdims=False)
-        safe = jnp.where(rows < 0, nb, rows)
-        xs = ops.batched_block_trsv(
-            diag[safe], b_pad[safe] - acc[safe], backend=cfg.kernel_backend
-        )
-        x = x.at[safe].set(jnp.where(ops.bcast_trailing(rows >= 0, xs), xs, x[safe]))
-        tids = jax.lax.dynamic_index_in_dim(ut, t, 0, keepdims=False)
-        prods = ops.batched_block_gemv(
-            tiles[tids], x[tcol[tids]], backend=cfg.kernel_backend, group=cfg.gemv_group
-        )
-        acc = acc.at[trow[tids]].add(prods)
-        return acc, x
-
+    body = _compact_level_body(plan, sr, ut, trow, tcol, tiles, diag, b_pad, ex=None)
     acc0 = jnp.zeros_like(b_pad)
     _, x = jax.lax.fori_loop(0, plan.n_levels, body, (acc0, acc0))
     return x[:nb]
@@ -233,36 +366,21 @@ def solve_local(plan: Plan, b_blocks: jax.Array) -> jax.Array:
 
 def _levelset_device_fn(plan: Plan):
     cfg = plan.config
-    nb, B, T = plan.bs.nb, plan.bs.B, plan.n_levels
-    zerocopy = cfg.comm == "zerocopy"
-    has_ex = plan.ex_levels.shape[1] > 0 and plan.n_devices > 1
+    nb, T = plan.bs.nb, plan.n_levels
+    # pad-traffic gate: only exchange when a psum can carry real data — the
+    # partition actually cut boundary rows AND there is a peer to combine with
+    has_ex = (
+        cfg.comm == "zerocopy" and plan.n_devices > 1 and plan.n_boundary_rows > 0
+    )
 
     def fn(sr, ut, trow, tcol, tiles, owner_mask, diag, ex, b_pad):
         # leading device dim of sharded operands is 1 inside shard_map
         sr, ut = sr[0], ut[0]
         trow, tcol, tiles, owner_mask = trow[0], tcol[0], tiles[0], owner_mask[0]
-
-        def body(t, carry):
-            acc, x = carry
-            if zerocopy and has_ex:
-                # lazy exactly-once pull: combine partial accumulators for the
-                # boundary rows of THIS level right before solving them
-                rows = jax.lax.dynamic_index_in_dim(ex, t, 0, keepdims=False)
-                red = jax.lax.psum(acc[rows], AXIS)
-                acc = acc.at[rows].set(red)
-            rows = jax.lax.dynamic_index_in_dim(sr, t, 0, keepdims=False)
-            safe = jnp.where(rows < 0, nb, rows)
-            xs = ops.batched_block_trsv(
-                diag[safe], b_pad[safe] - acc[safe], backend=cfg.kernel_backend
-            )
-            x = x.at[safe].set(jnp.where(ops.bcast_trailing(rows >= 0, xs), xs, x[safe]))
-            tids = jax.lax.dynamic_index_in_dim(ut, t, 0, keepdims=False)
-            prods = ops.batched_block_gemv(
-                tiles[tids], x[tcol[tids]], backend=cfg.kernel_backend, group=cfg.gemv_group
-            )
-            acc = acc.at[trow[tids]].add(prods)
-            return acc, x
-
+        body = _compact_level_body(
+            plan, sr, ut, trow, tcol, tiles, diag, b_pad,
+            ex=ex if has_ex else None,
+        )
         acc0 = jnp.zeros_like(b_pad)
         _, x = jax.lax.fori_loop(0, T, body, (acc0, acc0))
         xg = x * ops.bcast_trailing(owner_mask, x)
@@ -275,13 +393,15 @@ def _levelset_device_fn(plan: Plan):
 
 def _levelset_unified_device_fn(plan: Plan):
     """Unified-memory analogue: delta accumulators + full-array psum per level."""
-    cfg = plan.config
-    nb, B, T = plan.bs.nb, plan.bs.B, plan.n_levels
+    nb, T = plan.bs.nb, plan.n_levels
 
     def fn(sr, ut, trow, tcol, tiles, owner_mask, diag, ex, b_pad):
-        del ex
+        del ex  # unified ignores the packed exchange schedule
         sr, ut = sr[0], ut[0]
         trow, tcol, tiles, owner_mask = trow[0], tcol[0], tiles[0], owner_mask[0]
+        step = _compact_level_body(
+            plan, sr, ut, trow, tcol, tiles, diag, b_pad, ex=None, split_delta=True
+        )
 
         def body(t, carry):
             acc_red, delta, x = carry
@@ -289,18 +409,7 @@ def _levelset_unified_device_fn(plan: Plan):
             # the page-bouncing s.left_sum traffic of Alg. 2.
             acc_red = acc_red + jax.lax.psum(delta, AXIS)
             delta = jnp.zeros_like(delta)
-            rows = jax.lax.dynamic_index_in_dim(sr, t, 0, keepdims=False)
-            safe = jnp.where(rows < 0, nb, rows)
-            xs = ops.batched_block_trsv(
-                diag[safe], b_pad[safe] - acc_red[safe], backend=cfg.kernel_backend
-            )
-            x = x.at[safe].set(jnp.where(ops.bcast_trailing(rows >= 0, xs), xs, x[safe]))
-            tids = jax.lax.dynamic_index_in_dim(ut, t, 0, keepdims=False)
-            prods = ops.batched_block_gemv(
-                tiles[tids], x[tcol[tids]], backend=cfg.kernel_backend, group=cfg.gemv_group
-            )
-            delta = delta.at[trow[tids]].add(prods)
-            return acc_red, delta, x
+            return step(t, (acc_red, delta, x))
 
         z = jnp.zeros_like(b_pad)
         _, _, x = jax.lax.fori_loop(0, T, body, (z, z, z))
@@ -315,6 +424,9 @@ def _syncfree_device_fn(plan: Plan):
     nb, B = plan.bs.nb, plan.bs.B
     zerocopy = cfg.comm == "zerocopy"
     multi = plan.n_devices > 1
+    # with no boundary rows every tile's contribution is device-local, so the
+    # packed exchange would psum only the [nb] sentinel slot — skip it entirely
+    has_ex = zerocopy and multi and plan.n_boundary_rows > 0
 
     def fn(lr, trow, tcol, tiles, owner_mask, diag, indeg, exb, b_pad):
         lr = lr[0]
@@ -352,26 +464,28 @@ def _syncfree_device_fn(plan: Plan):
             )
             pm = jnp.where(ops.bcast_trailing(tmask, prods), prods, 0.0)
             cm = tmask.astype(jnp.int32)
-            if multi:
+            if multi and (has_ex or not zerocopy):
                 dm = ops.bcast_trailing(dest_mine, pm)
                 acc_red = acc_red.at[trow].add(jnp.where(dm, pm, 0.0))
                 cnt_red = cnt_red.at[trow].add(jnp.where(dest_mine, cm, 0))
                 delta = delta.at[trow].add(jnp.where(dm, 0.0, pm))
                 dcnt = dcnt.at[trow].add(jnp.where(dest_mine, 0, cm))
                 # 4. exchange remote contributions
-                if zerocopy:
+                if has_ex:  # packed boundary rows only
                     red = jax.lax.psum(delta[exb], AXIS)
                     redc = jax.lax.psum(dcnt[exb], AXIS)
                     acc_red = acc_red.at[exb].add(red)
                     cnt_red = cnt_red.at[exb].add(redc)
                     delta = delta.at[exb].set(0.0)
                     dcnt = dcnt.at[exb].set(0)
-                else:
+                else:  # unified: dense all-reduce of values and counters
                     acc_red = acc_red + jax.lax.psum(delta, AXIS)
                     cnt_red = cnt_red + jax.lax.psum(dcnt, AXIS)
                     delta = jnp.zeros_like(delta)
                     dcnt = jnp.zeros_like(dcnt)
             else:
+                # single device, or zerocopy with an empty cut: every tile's
+                # destination is local, no exchange needed
                 acc_red = acc_red.at[trow].add(pm)
                 cnt_red = cnt_red.at[trow].add(cm)
             # 5. global termination check
@@ -430,7 +544,7 @@ class DistributedSolver:
             in_specs = (sharded,) * 6 + (repl, repl, repl)
             self._args = (plan.solve_rows, plan.upd_tiles, plan.tile_row,
                           plan.tile_col, plan.tiles, owner_mask, plan.diag,
-                          plan.ex_levels)
+                          plan.ex_rows)
         else:
             fn = _syncfree_device_fn(plan)
             in_specs = (sharded,) * 5 + (repl, repl, repl, repl)

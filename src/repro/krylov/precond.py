@@ -116,16 +116,20 @@ def ilu0(a: CSR) -> tuple[CSR, CSR]:
         slot[ci[s:e]] = np.arange(s, e)
         for t in range(s, int(diag_ptr[i])):
             k = int(ci[t])
-            piv = v[diag_ptr[k]]
-            if piv == 0.0:
-                piv = 1e-12
-            v[t] /= piv
+            # pivot row k < i completed earlier, so its diagonal has already
+            # been breakdown-clamped below — never 0 here
+            v[t] /= v[diag_ptr[k]]
             # eliminate with row k's upper part, dropped to row i's pattern
             for u in range(int(diag_ptr[k]) + 1, int(rp[k + 1])):
                 p = slot[ci[u]]
                 if p >= 0:
                     v[p] -= v[t] * v[u]
         slot[ci[s:e]] = -1
+        if v[diag_ptr[i]] == 0.0:
+            # breakdown guard, written back into U: the diagonal is final once
+            # this row's elimination completes, and both later eliminations and
+            # the U-triangular solve divide by it
+            v[diag_ptr[i]] = 1e-12
 
     rows = np.repeat(np.arange(n, dtype=np.int64), np.diff(rp))
     cols = ci.astype(np.int64)

@@ -13,6 +13,7 @@ import numpy as np
 
 from repro import compat
 from repro.core import DistributedSolver, SolverConfig, build_plan, cut_stats, metrics
+from repro.core import partition as partition_strategies
 from repro.core.analysis import level_sets
 from repro.sparse import suite
 from repro.sparse.matrix import reference_solve
@@ -26,7 +27,8 @@ def main() -> None:
     ap.add_argument("--levels", type=int, default=64)
     ap.add_argument("--comm", default="zerocopy", choices=["zerocopy", "unified"])
     ap.add_argument("--sched", default="levelset", choices=["levelset", "syncfree"])
-    ap.add_argument("--partition", default="taskpool", choices=["taskpool", "contiguous"])
+    ap.add_argument("--partition", default="taskpool",
+                    choices=list(partition_strategies.STRATEGIES))
     ap.add_argument("--tasks-per-device", type=int, default=8)
     ap.add_argument("--block-size", type=int, default=32)
     ap.add_argument("--repeats", type=int, default=10)
@@ -48,7 +50,9 @@ def main() -> None:
     plan = build_plan(a, D, cfg)
     cs = cut_stats(plan.bs, plan.part)
     print(f"[solve] D={D} block={plan.bs.B} block-levels={plan.n_levels} "
-          f"boundary={cs.boundary_fraction:.0%} comm/solve={plan.comm_bytes_per_solve/1e3:.0f}KB")
+          f"boundary={cs.boundary_fraction:.0%} comm/solve={plan.comm_bytes_per_solve/1e3:.0f}KB "
+          f"level-imbalance={cs.level_imbalance:.2f} "
+          f"(cost {cs.level_cost_imbalance:.2f}) buckets={len(plan.buckets)}")
 
     solver = DistributedSolver(plan, mesh)
     rng = np.random.default_rng(0)

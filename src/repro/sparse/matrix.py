@@ -30,9 +30,23 @@ class CSC:
 
     def validate(self) -> None:
         assert self.col_ptr.shape == (self.n + 1,)
-        assert self.col_ptr[0] == 0 and np.all(np.diff(self.col_ptr) >= 1), "missing diagonal"
-        for j in (0, self.n - 1):  # spot-check: first row index of each column is the diagonal
-            assert self.row_idx[self.col_ptr[j]] == j, "columns must start at the diagonal"
+        assert self.col_ptr[0] == 0
+        assert self.row_idx.shape[0] == self.col_ptr[-1]
+        if self.n == 0:  # degenerate: empty matrix is trivially valid
+            return
+        assert np.all(np.diff(self.col_ptr) >= 1), "missing diagonal"
+        # every column starts at its diagonal entry ...
+        starts = np.asarray(self.col_ptr[:-1], dtype=np.int64)
+        assert np.array_equal(self.row_idx[starts], np.arange(self.n)), (
+            "columns must start at the diagonal"
+        )
+        # ... and row indices ascend strictly within each column
+        if self.nnz > 1:
+            col_of = np.repeat(np.arange(self.n), np.diff(self.col_ptr))
+            same_col = col_of[1:] == col_of[:-1]
+            assert np.all(np.diff(self.row_idx)[same_col] > 0), (
+                "row indices must ascend within each column"
+            )
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,57 @@
+"""CSC.validate: degenerate sizes and full structural checks (bugfix regression).
+
+Separate from test_sparse.py so it runs even without the optional hypothesis
+dependency.
+"""
+import numpy as np
+import pytest
+
+from repro.sparse.matrix import CSC, CSR, csr_to_csc, lower_triangular_from_coo
+
+
+def _csc(n=40, seed=0, m=160):
+    rng = np.random.default_rng(seed)
+    a = lower_triangular_from_coo(n, rng.integers(0, n, m), rng.integers(0, n, m), rng=rng)
+    return csr_to_csc(a)
+
+
+def test_validate_accepts_well_formed():
+    _csc().validate()
+
+
+def test_validate_empty_matrix():
+    """n == 0 used to crash on the row_idx[col_ptr[-1]] spot-check."""
+    CSC(n=0, col_ptr=np.zeros(1, np.int64), row_idx=np.zeros(0, np.int32),
+        val=np.zeros(0)).validate()
+
+
+def test_validate_single_entry():
+    CSC(n=1, col_ptr=np.array([0, 1], np.int64), row_idx=np.array([0], np.int32),
+        val=np.ones(1)).validate()
+
+
+def test_validate_rejects_missing_diagonal_start():
+    c = _csc(seed=1)
+    bad = c.row_idx.copy()
+    j = int(np.argmax(np.diff(c.col_ptr) > 1))  # a column with >1 entry
+    bad[c.col_ptr[j]] = min(c.n - 1, int(bad[c.col_ptr[j]]) + 1)
+    with pytest.raises(AssertionError):
+        CSC(n=c.n, col_ptr=c.col_ptr, row_idx=bad, val=c.val).validate()
+
+
+def test_validate_rejects_unsorted_rows_in_column():
+    c = _csc(seed=2)
+    lens = np.diff(c.col_ptr)
+    j = int(np.argmax(lens >= 3))  # column with >= 3 entries: swap its tail
+    assert lens[j] >= 3
+    bad = c.row_idx.copy()
+    s = int(c.col_ptr[j])
+    bad[s + 1], bad[s + 2] = bad[s + 2], bad[s + 1]
+    with pytest.raises(AssertionError):
+        CSC(n=c.n, col_ptr=c.col_ptr, row_idx=bad, val=c.val).validate()
+
+
+def test_validate_rejects_length_mismatch():
+    c = _csc(seed=3)
+    with pytest.raises(AssertionError):
+        CSC(n=c.n, col_ptr=c.col_ptr, row_idx=c.row_idx[:-1], val=c.val).validate()

@@ -37,7 +37,7 @@ def test_solver_all_modes_on_8_devices():
         mesh = compat.make_mesh((8,), ("x",))
         for comm in ["zerocopy", "unified"]:
             for sched in ["levelset", "syncfree"]:
-                for part in ["taskpool", "contiguous"]:
+                for part in ["taskpool", "contiguous", "malleable"]:
                     cfg = SolverConfig(block_size=16, comm=comm, sched=sched, partition=part)
                     x = sptrsv(a, b, mesh=mesh, config=cfg)
                     err = np.abs(x - x_ref).max() / np.abs(x_ref).max()

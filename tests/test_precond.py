@@ -91,6 +91,42 @@ def test_spd_lower_is_spd():
     assert np.linalg.eigvalsh(A).min() > 0
 
 
+def test_ilu0_zero_pivot_breakdown_regression():
+    """A pattern whose elimination produces an exactly-zero pivot: the clamp
+    must be written back into U, so U's diagonal stays nonzero and the
+    transpose-plan U-solve stays finite (it used to divide by zero)."""
+    # A = [[1,1,0],[1,1,1],[0,1,1]]: eliminating row 1 gives U[1,1] = 0, which
+    # row 2 then uses as its pivot.
+    A = np.array([[1.0, 1.0, 0.0],
+                  [1.0, 1.0, 1.0],
+                  [0.0, 1.0, 1.0]])
+    nz = A != 0
+    rp = np.concatenate([[0], np.cumsum(nz.sum(1))]).astype(np.int64)
+    ci = np.concatenate([np.nonzero(nz[i])[0] for i in range(3)]).astype(np.int32)
+    a = CSR(n=3, row_ptr=rp, col_idx=ci, val=A[nz].astype(np.float64))
+    lower, upper = ilu0(a)
+    u_diag = upper.val[upper.row_ptr[:-1]]  # upper CSR: diagonal entry first
+    assert np.all(u_diag != 0.0), "clamped pivot must be written back"
+    assert np.all(np.isfinite(lower.val)) and np.all(np.isfinite(upper.val))
+    # the real downstream consumer: U x = y through the transpose-plan solver
+    y = np.array([1.0, 2.0, 3.0])
+    plan = build_plan(upper_as_reversed_lower(upper), 1,
+                      SolverConfig(block_size=4), transpose=True)
+    x = DistributedSolver(plan, _mesh1()).solve(y)
+    assert np.all(np.isfinite(x))
+
+
+def test_ilu0_trailing_zero_pivot_clamped():
+    """A zero pivot on the LAST row is never used by a later elimination — it
+    must still be clamped so U's diagonal is nonzero."""
+    A = np.array([[1.0, 1.0],
+                  [1.0, 1.0]])
+    rp = np.array([0, 2, 4], np.int64)
+    ci = np.array([0, 1, 0, 1], np.int32)
+    _, upper = ilu0(CSR(n=2, row_ptr=rp, col_idx=ci, val=A.reshape(-1).copy()))
+    assert np.all(upper.val[upper.row_ptr[:-1]] != 0.0)
+
+
 # ---------------------------------------------------------------------------
 # transpose / upper-triangular solves through the distributed solver
 # ---------------------------------------------------------------------------

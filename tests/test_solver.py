@@ -83,6 +83,63 @@ def test_comm_bytes_accounting():
     assert zc.comm_bytes_per_solve < un.comm_bytes_per_solve
 
 
+@pytest.mark.parametrize("comm", ["zerocopy", "unified"])
+@pytest.mark.parametrize("sched", ["levelset", "syncfree"])
+def test_comm_bytes_zero_on_single_device(comm, sched):
+    """Single-device plans execute no collectives: the model must say 0 bytes
+    (it used to count the sentinel pad slots of the exchange schedules)."""
+    a = MATRICES["levelled"]()
+    plan = build_plan(a, 1, SolverConfig(block_size=16, comm=comm, sched=sched))
+    assert plan.comm_bytes_per_solve == 0
+
+
+@pytest.mark.parametrize("sched", ["levelset", "syncfree"])
+def test_comm_bytes_zero_when_no_boundary(sched):
+    """A partition with an empty cut exchanges nothing under zerocopy, even on
+    a multi-device plan — and the solver still matches the oracle."""
+    a = suite.block_diagonal_parallel(512, 8, 3.0, seed=2)
+    cfg = SolverConfig(block_size=16, comm="zerocopy", sched=sched,
+                       partition="contiguous")
+    plan = build_plan(a, 8, cfg)
+    assert plan.n_boundary_rows == 0
+    assert plan.comm_bytes_per_solve == 0
+
+
+def test_comm_bytes_is_executed_exchange_payload():
+    """Levelset/zerocopy volume = what the bucketed executor actually psums:
+    at least one slot per real boundary row, but strictly below the old dense
+    (T, max-width) sentinel-slot accounting."""
+    a = MATRICES["levelled"]()
+    plan = build_plan(a, 4, SolverConfig(block_size=16, comm="zerocopy"))
+    assert plan.n_boundary_rows > 0
+    widths = np.array(plan.buckets)[plan.lvl_bucket]
+    assert plan.comm_bytes_per_solve == widths[:, 2].sum() * plan.bs.B * 4
+    assert plan.comm_bytes_per_solve >= plan.n_boundary_rows * plan.bs.B * 4
+    per_level = np.bincount(plan.bs.block_level[plan.part.boundary],
+                            minlength=plan.n_levels)
+    old_model = plan.n_levels * per_level.max() * plan.bs.B * 4
+    assert plan.comm_bytes_per_solve < old_model
+
+
+def test_compacted_schedules_beat_pad_to_max():
+    """The ragged layout's total padded footprint must undercut the old dense
+    (T, max-width) layout on a skewed level-size distribution."""
+    a = suite.random_levelled(600, 40, 4.0, seed=6)
+    plan = build_plan(a, 4, SolverConfig(block_size=16))
+    T = plan.n_levels
+    assert 1 <= len(plan.buckets) <= 12
+    widths = np.array(plan.buckets)[plan.lvl_bucket]  # (T, 3) per-level widths
+    for k, flat in ((0, plan.solve_rows), (1, plan.upd_tiles)):
+        dense = T * widths[:, k].max()
+        assert flat.shape[1] == max(1, widths[:, k].sum()) < dense
+    # offsets partition the flats exactly
+    np.testing.assert_array_equal(plan.lvl_off[:, 0],
+                                  np.concatenate([[0], np.cumsum(widths[:-1, 0])]))
+    # every real (non-pad) schedule entry survives compaction
+    owned = [np.sort(plan.solve_rows[d][plan.solve_rows[d] >= 0]) for d in range(4)]
+    np.testing.assert_array_equal(np.sort(np.concatenate(owned)), np.arange(plan.bs.nb))
+
+
 def test_comm_bytes_syncfree_counts_counter_traffic():
     """Syncfree/unified psums in-degree counters on top of the accumulators —
     its predicted volume must exceed levelset/unified on the same matrix."""
