@@ -3,7 +3,10 @@
 Normalized (derived column) to the single-device level-set solver — the
 paper's cusparse_csrsv2 analogue. Total tasks fixed at 32 (paper §VI-D).
 Each device count runs both the round-robin ``taskpool`` and the cost-model
-``malleable`` partition (``.../malleable`` rows).
+``malleable`` partition (``.../malleable`` rows), and on the FUSED_FOCUS
+matrices also the superstep megakernel backend (``.../fused`` rows) so the
+fused-vs-switch gap is tracked across the scaling curve (on CPU the fused
+rows time Pallas interpret mode — see bench_tasks for the flagged caveat).
 """
 from __future__ import annotations
 
@@ -18,6 +21,7 @@ from repro.core.blocking import pad_rhs
 from repro.sparse.suite import table1_suite
 
 FOCUS = ("nlpkkt160", "Wordnet3", "chipcool0", "webbase-1M", "dc2")
+FUSED_FOCUS = ("nlpkkt160", "webbase-1M")
 
 
 def main() -> None:
@@ -46,6 +50,15 @@ def main() -> None:
                 us = time_call(solver.solve_blocks, b)
                 suffix = "" if strategy == "taskpool" else f"/{strategy}"
                 emit(f"fig10/{entry.name}/{D}dev{suffix}", us,
+                     f"speedup_vs_1dev={base_us/us:.2f}")
+            if entry.name in FUSED_FOCUS:
+                cfg = SolverConfig(block_size=16, comm="zerocopy",
+                                   partition="taskpool",
+                                   tasks_per_device=max(1, total_tasks // D),
+                                   kernel_backend="fused")
+                solver = DistributedSolver(build_plan(a, D, cfg), mesh)
+                us = time_call(solver.solve_blocks, b)
+                emit(f"fig10/{entry.name}/{D}dev/fused", us,
                      f"speedup_vs_1dev={base_us/us:.2f}")
 
 

@@ -5,6 +5,12 @@ Swept for both the paper's round-robin ``taskpool`` and the cost-model
 adaptive tasks carved per level). Derived column: performance normalized to
 the 4-tasks/device case of the same strategy (paper's normalization), i.e.
 ``t_4task / t_this``.
+
+Also emits the ``kernel/<matrix>/{fused,switch}`` comparison: the same plan
+run through the superstep megakernel (``kernel_backend="fused"``) vs the
+``lax.switch`` executor, with the exact dispatch counts from
+``dispatch_stats`` in the derived column — the launch-overhead claim is
+measured, not asserted.
 """
 from __future__ import annotations
 
@@ -12,12 +18,13 @@ import numpy as np
 
 from repro import compat
 from benchmarks.common import bench_scale, emit, time_call
-from repro.core import DistributedSolver, SolverConfig, build_plan
+from repro.core import DistributedSolver, SolverConfig, build_plan, dispatch_stats
 from repro.core.blocking import pad_rhs
 from repro.sparse.suite import table1_suite
 
 TASKS = [1, 2, 4, 8, 16, 32]
 STRATEGIES = ("taskpool", "malleable")
+KERNEL_FOCUS = ("dc2", "pkustk14")  # wide + chain-skewed regimes
 
 
 def main() -> None:
@@ -43,6 +50,31 @@ def main() -> None:
             for t in TASKS:
                 emit(f"fig9/{entry.name}/tasks{t}{suffix}", results[t],
                      f"norm_vs_4task={results[4] / results[t]:.2f}")
+
+        # fused megakernel vs lax.switch executor on the same plan. On CPU the
+        # fused column runs in Pallas INTERPRET mode (flagged in the derived
+        # field) — there the portable signal is the dispatch-count ratio, not
+        # the wall time; only a TPU run times the compiled megakernel.
+        if entry.name in KERNEL_FOCUS:
+            from repro.kernels import ops
+
+            times = {}
+            stats = None
+            for kb in ("reference", "fused"):
+                cfg = SolverConfig(block_size=16, comm="zerocopy",
+                                   partition="taskpool", tasks_per_device=8,
+                                   kernel_backend=kb)
+                plan = build_plan(a, D, cfg)
+                stats = dispatch_stats(plan)
+                solver = DistributedSolver(plan, mesh)
+                times[kb] = time_call(solver.solve_blocks, b)
+            mode = "interpret" if ops.interpret_mode() else "compiled"
+            derived = (f"fused_launches={stats['fused_launches']};"
+                       f"switch_dispatches={stats['switch_dispatches']};"
+                       f"speedup_vs_switch={times['reference'] / times['fused']:.2f};"
+                       f"fused_mode={mode}")
+            emit(f"kernel/{entry.name}/switch", times["reference"], derived)
+            emit(f"kernel/{entry.name}/fused", times["fused"], derived)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,86 @@
+"""Cross-PR perf-trajectory gate (ROADMAP "Perf trajectory").
+
+Compares two bench JSON row maps (written by ``benchmarks/run.py``) and fails
+when any row shared by both regresses by more than the threshold:
+
+    python benchmarks/compare.py PREV.json NEW.json [--max-regression 0.25]
+
+Rows are matched on their full ``suite/mode`` name. Sub-threshold timings
+(default < 50us) are skipped — at that scale CI-runner jitter swamps any real
+signal. Rows present in only one file are listed informationally (new
+benchmarks appear, retired ones disappear) but never fail the gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+MIN_US = 50.0  # ignore rows faster than this: pure scheduler noise on CI
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        rows = json.load(f)
+    return {k: float(v.get("us_per_call", 0.0)) for k, v in rows.items()}
+
+
+def compare(prev: dict, new: dict, max_regression: float):
+    """Returns (regressions, improvements, skipped, zeroed) row lists."""
+    regressions, improvements, skipped, zeroed = [], [], [], []
+    for name in sorted(set(prev) & set(new)):
+        old_us, new_us = prev[name], new[name]
+        if new_us <= 0.0 < old_us:
+            # a previously-timed row now reports 0: the bench likely broke;
+            # surface it loudly instead of burying it in the skip count
+            zeroed.append((name, old_us))
+            continue
+        if old_us < MIN_US and new_us < MIN_US:
+            skipped.append(name)  # both sub-threshold: pure scheduler noise
+            continue
+        if old_us <= 0.0:
+            skipped.append(name)
+            continue
+        ratio = new_us / old_us
+        if ratio > 1.0 + max_regression:
+            regressions.append((name, old_us, new_us, ratio))
+        elif ratio < 1.0 - max_regression:
+            improvements.append((name, old_us, new_us, ratio))
+    return regressions, improvements, skipped, zeroed
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("prev")
+    ap.add_argument("new")
+    ap.add_argument("--max-regression", type=float, default=0.25,
+                    help="fail when new > prev * (1 + this) on any shared row")
+    args = ap.parse_args(argv)
+    prev, new = load_rows(args.prev), load_rows(args.new)
+    regressions, improvements, skipped, zeroed = compare(
+        prev, new, args.max_regression)
+
+    only_prev = sorted(set(prev) - set(new))
+    only_new = sorted(set(new) - set(prev))
+    print(f"[compare] {len(set(prev) & set(new))} shared rows "
+          f"({len(skipped)} below {MIN_US:.0f}us noise floor), "
+          f"{len(only_prev)} retired, {len(only_new)} new")
+    for name, old_us in zeroed:
+        print(f"[compare] WARNING {name}: previously {old_us:.0f}us, now "
+              f"reports 0 — benchmark broken or no longer timed")
+    for name, old_us, new_us, ratio in improvements:
+        print(f"[compare] improved  {name}: {old_us:.0f} -> {new_us:.0f}us "
+              f"({ratio:.2f}x)")
+    for name, old_us, new_us, ratio in regressions:
+        print(f"[compare] REGRESSED {name}: {old_us:.0f} -> {new_us:.0f}us "
+              f"({ratio:.2f}x > {1 + args.max_regression:.2f}x)")
+    if regressions:
+        print(f"[compare] FAIL: {len(regressions)} row(s) regressed "
+              f">{args.max_regression:.0%}")
+        return 1
+    print("[compare] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,10 +13,12 @@ Multi-device sections run in subprocesses with forced host device counts.
 ``REPRO_BENCH_FAST=1`` (or ``--quick``) runs a reduced set for CI-style smoke
 runs.
 
-Besides the CSV on stdout, every run writes ``BENCH_PR2.json`` — a
-machine-readable ``{name: {"us_per_call": float, "derived": str}}`` map of the
-same rows (CI uploads it as an artifact, so the perf trajectory is diffable
-across PRs).
+Besides the CSV on stdout, every run writes a machine-readable
+``{name: {"us_per_call": float, "derived": str}}`` map of the same rows. The
+file name comes from ``REPRO_BENCH_JSON`` when set, else
+``BENCH_PR<REPRO_PR_NUMBER>.json``, else ``BENCH.json``. CI uploads it as the
+``bench-trajectory`` artifact and ``benchmarks/compare.py`` gates the next
+run against it (>25% per-row regressions fail).
 
   krylov  IC(0)-PCG iteration cost, suite x comm/partition x RHS batch
 """
@@ -100,7 +102,9 @@ def main() -> None:
                 )
                 print(f"{name},{r['bound_s']*1e6:.1f},{derived}")
 
-    out = os.environ.get("REPRO_BENCH_JSON", "BENCH_PR2.json")
+    pr = os.environ.get("REPRO_PR_NUMBER")
+    default = f"BENCH_PR{pr}.json" if pr else "BENCH.json"
+    out = os.environ.get("REPRO_BENCH_JSON", default)
     with open(out, "w") as f:
         json.dump(rows_from_csv(tee.buffer_text.getvalue()), f, indent=1, sort_keys=True)
     sys.stderr.write(f"[bench] wrote {out}\n")

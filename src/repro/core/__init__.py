@@ -8,6 +8,8 @@ from repro.core.solver import (
     Plan,
     SolverConfig,
     build_plan,
+    dispatch_stats,
+    fused_segments,
     solve_local,
     sptrsv,
 )

@@ -45,20 +45,41 @@ class Partition:
         return np.nonzero(self.owner == d)[0].astype(np.int32)
 
 
-def block_row_cost(bs: BlockStructure) -> np.ndarray:
-    """Per-block-row work in block-op units: one B×B TRSV for the diagonal
-    solve plus one B×B GEMV per tile in the row's *column* (tiles live on their
-    column's owner, so owning row r means computing column r's updates). GEMV
-    moves ~2x the flops of the triangular solve at equal B."""
-    return 1.0 + 2.0 * np.bincount(bs.off_cols, minlength=bs.nb)
+DEFAULT_COST_WEIGHTS = (1.0, 1.0, 1.0)  # (w_solve, w_tile_mem, w_tile_flop)
+
+
+def block_row_cost(
+    bs: BlockStructure,
+    *,
+    weights: tuple = DEFAULT_COST_WEIGHTS,
+    R: int = 1,
+) -> np.ndarray:
+    """Per-block-row work in block-op units for an R-wide RHS panel.
+
+    Owning row r means one B×B diagonal solve plus one B×B product per tile in
+    the row's *column* (tiles live on their column's owner). The minimal
+    multi-RHS model splits the tile term into an R-independent load
+    (``w_tile_mem`` — GEMM amortizes the tile fetch across the panel) and a
+    per-RHS MXU term (``w_tile_flop``):
+
+        cost = w_solve·R + (w_tile_mem + w_tile_flop·R) · tiles_in_column
+
+    The defaults reproduce the analytic 1:2 TRSV:GEMV ratio at R=1
+    (``1 + 2·tiles``); calibrated weights come from
+    :func:`repro.core.costmodel.calibrate_weights`.
+    """
+    w_solve, w_tile_mem, w_tile_flop = weights
+    col_tiles = np.bincount(bs.off_cols, minlength=bs.nb)
+    return w_solve * R + (w_tile_mem + w_tile_flop * R) * col_tiles
 
 
 def _malleable_owner(
-    bs: BlockStructure, n_devices: int, tasks_per_device: int
+    bs: BlockStructure, n_devices: int, tasks_per_device: int,
+    cost_weights: tuple = DEFAULT_COST_WEIGHTS, cost_R: int = 1,
 ) -> np.ndarray:
     nb, D = bs.nb, n_devices
     owner = np.full(nb, -1, dtype=np.int32)
-    cost = block_row_cost(bs)
+    cost = block_row_cost(bs, weights=cost_weights, R=cost_R)
     lvl = bs.block_level
     # row -> predecessor block-columns (CSR over tiles), for placement affinity
     order = np.argsort(bs.off_rows, kind="stable")
@@ -128,7 +149,13 @@ def make_partition(
     n_devices: int,
     strategy: str = "taskpool",
     tasks_per_device: int = 8,
+    *,
+    cost_weights: tuple | None = None,
+    cost_R: int = 1,
 ) -> Partition:
+    """``cost_weights``/``cost_R`` feed the malleable strategy's cost model
+    (calibrated TRSV:GEMV weights and the expected RHS panel width); the
+    row-count strategies ignore them."""
     nb = bs.nb
     if strategy == "contiguous":
         per = -(-nb // n_devices)
@@ -140,7 +167,10 @@ def make_partition(
         task_of = np.arange(nb) // task_size
         owner = (task_of % n_devices).astype(np.int32)  # round-robin deal (paper §V)
     elif strategy == "malleable":
-        owner = _malleable_owner(bs, n_devices, tasks_per_device)
+        owner = _malleable_owner(
+            bs, n_devices, tasks_per_device,
+            cost_weights=cost_weights or DEFAULT_COST_WEIGHTS, cost_R=cost_R,
+        )
     else:
         raise ValueError(f"unknown partition strategy: {strategy!r} "
                          f"(expected one of {STRATEGIES})")

@@ -48,6 +48,7 @@ from repro import compat
 from repro.core.blocking import BlockStructure, build_blocks
 from repro.core.partition import Partition, make_partition
 from repro.kernels import ops
+from repro.kernels.superstep import superstep_call
 from repro.sparse.matrix import CSR, reverse_transpose
 
 AXIS = "x"  # device axis name used by the solver
@@ -62,8 +63,13 @@ class SolverConfig:
     sched: str = "levelset"  # "levelset" | "syncfree"
     partition: str = "taskpool"  # "taskpool" | "contiguous" | "malleable"
     tasks_per_device: int = 8
-    kernel_backend: str | None = None  # None -> ops default ("reference" on CPU)
+    # None -> env/platform default; "reference"/"pallas" pick the per-op kernels
+    # for the lax.switch executor; "fused" runs the superstep megakernel
+    # (levelset) / frontier-bucketed executor (syncfree).
+    kernel_backend: str | None = None
     gemv_group: int = 0
+    rhs_hint: int = 1  # expected RHS panel width R, feeds the partition cost model
+    calibrate_cost: bool = False  # calibrate cost weights via hlo_cost per backend
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +99,10 @@ class Plan:
     tile_col: np.ndarray  # (D, ML+1) src block-col per local tile, pad nb
     tiles: np.ndarray  # (D, ML+1, B, B) zero tile at pad slot
     transpose: bool = False  # plan solves a^T x = b (built on reverse_transpose(a))
+    # max (rows, tiles) any device schedules in one level — the syncfree runtime
+    # frontier can never exceed these (bulk-synchronous sweeps converge
+    # level-by-level), so they cap the frontier width ladder
+    frontier_caps: tuple = (1, 1)
 
     @property
     def n_supersteps(self) -> int:
@@ -189,7 +199,17 @@ def build_plan(
         a = reverse_transpose(a)
     bs = build_blocks(a, config.block_size)
     if part is None:
-        part = make_partition(bs, n_devices, config.partition, config.tasks_per_device)
+        cost_weights = None
+        if config.calibrate_cost and config.partition == "malleable":
+            from repro.core.costmodel import calibrate_weights
+
+            cost_weights = calibrate_weights(
+                config.block_size, backend=config.kernel_backend
+            )
+        part = make_partition(
+            bs, n_devices, config.partition, config.tasks_per_device,
+            cost_weights=cost_weights, cost_R=config.rhs_hint,
+        )
     else:
         assert part.owner.shape[0] == bs.nb, "partition/block-structure mismatch"
     nb, B, D = bs.nb, bs.B, n_devices
@@ -267,6 +287,8 @@ def build_plan(
         buckets=buckets, solve_rows=solve_rows, upd_tiles=upd_tiles,
         local_rows=local_rows, tile_row=tile_row, tile_col=tile_col, tiles=tiles,
         transpose=transpose,
+        frontier_caps=(max(1, int(ws.max())) if T else 1,
+                       max(1, int(wu.max())) if T else 1),
     )
 
 
@@ -337,6 +359,154 @@ def _compact_level_body(
 
 
 # ---------------------------------------------------------------------------
+# fused superstep megakernel executors (kernel_backend="fused")
+# ---------------------------------------------------------------------------
+
+
+def level_widths(plan: Plan) -> np.ndarray:
+    """(T, 3) per-level (solve, update, exchange) bucket widths."""
+    return np.asarray(plan.buckets, dtype=np.int64)[plan.lvl_bucket]
+
+
+def fused_segments(plan: Plan) -> np.ndarray:
+    """(n_seg, 2) ``[lo, hi)`` level ranges, one fused launch each.
+
+    Collectives cannot live inside a Pallas kernel, so the fused executor
+    splits the schedule exactly before every level whose boundary rows must be
+    combined: zerocopy breaks at levels with a non-empty exchange bucket,
+    unified (dense psum every superstep) degenerates to one segment per level,
+    and single-device / empty-cut plans fuse the whole solve into one launch.
+    """
+    T = plan.n_levels
+    if T == 0:
+        return np.zeros((0, 2), dtype=np.int32)
+    cfg = plan.config
+    if cfg.comm == "unified" and plan.n_devices > 1:
+        lo = np.arange(T, dtype=np.int32)
+        return np.stack([lo, lo + 1], axis=1)
+    wid = level_widths(plan)
+    starts = [0]
+    if cfg.comm == "zerocopy" and plan.n_devices > 1 and plan.n_boundary_rows > 0:
+        starts += [t for t in range(1, T) if wid[t, 2] > 0]
+    starts = np.unique(np.asarray(starts, dtype=np.int32))
+    his = np.concatenate([starts[1:], [T]]).astype(np.int32)
+    return np.stack([starts, his], axis=1)
+
+
+def dispatch_stats(plan: Plan) -> dict:
+    """Predicted per-solve dispatch counts for the two levelset executors.
+
+    The switch path re-dispatches gather+TRSV and GEMV+scatter per level (plus
+    the boundary psum); the fused path is one megakernel launch per exchange
+    segment. This is the launch-count model behind the fused-vs-switch bench
+    columns — measured times ride next to it, the counts are exact.
+    """
+    wid = level_widths(plan)
+    cfg = plan.config
+    has_ex = (cfg.comm == "zerocopy" and plan.n_devices > 1
+              and plan.n_boundary_rows > 0)
+    unified = cfg.comm == "unified" and plan.n_devices > 1
+    n_ex = (int((wid[:, 2] > 0).sum()) if has_ex
+            else (plan.n_levels if unified else 0))
+    switch = int(2 * (wid[:, 0] > 0).sum() + 2 * (wid[:, 1] > 0).sum()) + n_ex
+    n_seg = int(len(fused_segments(plan)))
+    return {"switch_dispatches": switch, "fused_launches": n_seg,
+            "exchanges": n_ex}
+
+
+def _fused_device_args(plan: Plan, d: int = 0):
+    """Device-local schedule arrays for a direct (non-shard_map) fused call."""
+    return (
+        jnp.asarray(plan.lvl_off), jnp.asarray(level_widths(plan)),
+        jnp.asarray(plan.solve_rows[d]), jnp.asarray(plan.upd_tiles[d]),
+        jnp.asarray(plan.tile_row[d]), jnp.asarray(plan.tile_col[d]),
+        jnp.asarray(plan.diag), jnp.asarray(plan.tiles[d]),
+    )
+
+
+def _fused_levelset_device_fn(plan: Plan):
+    """Megakernel levelset executor: one Pallas launch per exchange segment.
+
+    Mirrors the ``lax.switch`` executors' arithmetic exactly — the same
+    per-level exchange (packed psum at the level's bucket width, or the
+    unified dense delta psum) runs *between* launches, and everything between
+    two exchanges fuses into a single scalar-prefetched superstep kernel.
+    """
+    cfg = plan.config
+    nb, T, D = plan.bs.nb, plan.n_levels, plan.n_devices
+    unified = cfg.comm == "unified" and D > 1
+    has_ex = cfg.comm == "zerocopy" and D > 1 and plan.n_boundary_rows > 0
+    segs = fused_segments(plan)
+    n_seg = max(1, len(segs))
+    seg_len = segs[:, 1] - segs[:, 0] if len(segs) else np.zeros(1, np.int32)
+    grid = max(1, int(seg_len.max(initial=0)))
+    wid = level_widths(plan)
+    interp = ops.interpret_mode()
+    seg_tab = (np.stack([segs[:, 0], seg_len], axis=1).astype(np.int32)
+               if len(segs) else np.zeros((1, 2), np.int32))
+    if has_ex and len(segs):
+        # per-segment exchange width = the first level's exchange bucket
+        ex_w = wid[segs[:, 0], 2]
+        ex_ladder = sorted({int(w) for w in ex_w})
+        ex_sel = np.array([ex_ladder.index(int(w)) for w in ex_w], np.int32)
+        ex_off = plan.lvl_off[segs[:, 0], 2].astype(np.int32)
+
+    def fn(sr, ut, trow, tcol, tiles, owner_mask, diag, ex, b_pad):
+        sr, ut = sr[0], ut[0]
+        trow, tcol, tiles, owner_mask = trow[0], tcol[0], tiles[0], owner_mask[0]
+        off_a = jnp.asarray(plan.lvl_off)
+        wid_a = jnp.asarray(wid)
+        seg_a = jnp.asarray(seg_tab)
+        z = jnp.zeros_like(b_pad)
+
+        if has_ex:
+            ex_off_a = jnp.asarray(ex_off)
+            ex_sel_a = jnp.asarray(ex_sel)
+
+            def make_branch(w):
+                def br(s, acc):
+                    if w == 0:
+                        return acc
+                    rows = jax.lax.dynamic_slice(ex, (ex_off_a[s],), (w,))
+                    return acc.at[rows].set(jax.lax.psum(acc[rows], AXIS))
+
+                return br
+
+            ex_branches = [make_branch(w) for w in ex_ladder]
+
+        def body(s, carry):
+            if unified:
+                acc, delta, x = carry
+                acc = acc + jax.lax.psum(delta, AXIS)
+                delta = jnp.zeros_like(delta)
+                return superstep_call(
+                    seg_a[s], off_a, wid_a, sr, ut, trow, tcol, diag, tiles,
+                    b_pad, acc, x, delta, grid=grid, split_delta=True,
+                    interpret=interp,
+                )
+            acc, x = carry
+            if has_ex:
+                if len(ex_branches) == 1:
+                    acc = ex_branches[0](s, acc)
+                else:
+                    acc = jax.lax.switch(ex_sel_a[s], ex_branches, s, acc)
+            return superstep_call(
+                seg_a[s], off_a, wid_a, sr, ut, trow, tcol, diag, tiles,
+                b_pad, acc, x, grid=grid, interpret=interp,
+            )
+
+        init = (z, z, z) if unified else (z, z)
+        carry = jax.lax.fori_loop(0, n_seg, body, init)
+        x = carry[-1]
+        xg = x * ops.bcast_trailing(owner_mask, x)
+        if D > 1:
+            xg = jax.lax.psum(xg, AXIS)
+        return xg[:nb]
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
 # single-device levelset executor (the "1-GPU" baseline and structural oracle)
 # ---------------------------------------------------------------------------
 
@@ -344,15 +514,25 @@ def _compact_level_body(
 def solve_local(plan: Plan, b_blocks: jax.Array) -> jax.Array:
     """Level-scheduled solve on one device. b_blocks: (nb, B) -> x (nb, B)."""
     nb = plan.bs.nb
+    b_pad = jnp.concatenate(
+        [b_blocks, jnp.zeros((1,) + b_blocks.shape[1:], b_blocks.dtype)]
+    )
+    if ops.executor_backend(plan.config.kernel_backend) == "fused":
+        # the whole solve is one megakernel launch (no exchanges on 1 device)
+        off, wid, sr, ut, trow, tcol, diag, tiles = _fused_device_args(plan, 0)
+        acc0 = jnp.zeros_like(b_pad)
+        seg = jnp.array([0, plan.n_levels], jnp.int32)
+        _, x = superstep_call(
+            seg, off, wid, sr, ut, trow, tcol, diag, tiles, b_pad, acc0, acc0,
+            grid=max(1, plan.n_levels), interpret=ops.interpret_mode(),
+        )
+        return x[:nb]
     diag = jnp.asarray(plan.diag)
     sr = jnp.asarray(plan.solve_rows[0])
     ut = jnp.asarray(plan.upd_tiles[0])
     trow = jnp.asarray(plan.tile_row[0])
     tcol = jnp.asarray(plan.tile_col[0])
     tiles = jnp.asarray(plan.tiles[0])
-    b_pad = jnp.concatenate(
-        [b_blocks, jnp.zeros((1,) + b_blocks.shape[1:], b_blocks.dtype)]
-    )
     body = _compact_level_body(plan, sr, ut, trow, tcol, tiles, diag, b_pad, ex=None)
     acc0 = jnp.zeros_like(b_pad)
     _, x = jax.lax.fori_loop(0, plan.n_levels, body, (acc0, acc0))
@@ -418,8 +598,31 @@ def _levelset_unified_device_fn(plan: Plan):
     return fn
 
 
-def _syncfree_device_fn(plan: Plan):
-    """Runtime-frontier solver: no level analysis, in-degree counters drive it."""
+def _frontier_ladder(cap: int) -> tuple:
+    """Geometric width ladder ``1, b, b², ..., cap`` for the runtime frontier;
+    the base coarsens (2 -> 4 -> 16) until the ladder fits MAX_BUCKETS."""
+    cap = max(1, int(cap))
+    for base in (2, 4, 16):
+        lad = sorted({cap} | {base ** k for k in range(64) if base ** k < cap})
+        if len(lad) <= MAX_BUCKETS:
+            return tuple(int(w) for w in lad)
+    return (cap,)
+
+
+def _syncfree_device_fn(plan: Plan, frontier: bool = False):
+    """Runtime-frontier solver: no level analysis, in-degree counters drive it.
+
+    ``frontier=False`` is the paper-faithful dense scan: every sweep solves a
+    masked TRSV over *all* local rows and a masked GEMV over *all* local
+    tiles. ``frontier=True`` (the ``fused`` backend) compacts the ready set
+    each sweep and dispatches one ``lax.switch`` branch at the smallest
+    bucket width covering it — the same width-ladder trick as the compacted
+    levelset schedules, keyed on the *runtime* frontier size, so per-sweep
+    work scales with the frontier, not with the device's whole row set. The
+    ladder is capped by ``plan.frontier_caps`` (a bulk-synchronous sweep
+    solves exactly one block level, so the frontier never exceeds the widest
+    per-device level).
+    """
     cfg = plan.config
     nb, B = plan.bs.nb, plan.bs.B
     zerocopy = cfg.comm == "zerocopy"
@@ -427,6 +630,10 @@ def _syncfree_device_fn(plan: Plan):
     # with no boundary rows every tile's contribution is device-local, so the
     # packed exchange would psum only the [nb] sentinel slot — skip it entirely
     has_ex = zerocopy and multi and plan.n_boundary_rows > 0
+    MLR = plan.local_rows.shape[1]
+    MLT = plan.tiles.shape[1]  # ML + 1 (pad slot holds the zero tile, dest nb)
+    lad_s = _frontier_ladder(min(plan.frontier_caps[0], MLR))
+    lad_u = _frontier_ladder(min(plan.frontier_caps[1], MLT))
 
     def fn(lr, trow, tcol, tiles, owner_mask, diag, indeg, exb, b_pad):
         lr = lr[0]
@@ -436,6 +643,54 @@ def _syncfree_device_fn(plan: Plan):
         lb = b_pad[lr]
         lown = owner_mask[lr] > 0  # valid (non-pad) local rows
         dest_mine = owner_mask[trow] > 0  # tile dest owned by this device
+        iota_l = jnp.arange(MLR, dtype=jnp.int32)
+        iota_t = jnp.arange(MLT, dtype=jnp.int32)
+        lad_s_a = jnp.asarray(lad_s, jnp.int32)
+        lad_u_a = jnp.asarray(lad_u, jnp.int32)
+
+        def solve_branch(w):
+            def br(order, acc_red, x):
+                idx = jax.lax.dynamic_slice(order, (0,), (w,))
+                valid = idx < MLR
+                rows = jnp.where(valid, lr[jnp.where(valid, idx, 0)], nb)
+                xs = ops.batched_block_trsv(
+                    diag[rows], b_pad[rows] - acc_red[rows],
+                    backend=cfg.kernel_backend,
+                )
+                return x.at[rows].set(
+                    jnp.where(ops.bcast_trailing(valid, xs), xs, x[rows])
+                )
+
+            return br
+
+        def upd_branch(w):
+            def br(torder, x, acc_red, delta, cnt_red, dcnt):
+                tid = jax.lax.dynamic_slice(torder, (0,), (w,))
+                valid = tid < MLT
+                tid = jnp.where(valid, tid, MLT - 1)  # pad: zero tile, dest nb
+                rd = trow[tid]
+                dmine = dest_mine[tid]
+                prods = ops.batched_block_gemv(
+                    tiles[tid], x[tcol[tid]], backend=cfg.kernel_backend,
+                    group=cfg.gemv_group,
+                )
+                pm = jnp.where(ops.bcast_trailing(valid, prods), prods, 0.0)
+                cm = valid.astype(jnp.int32)
+                if multi and (has_ex or not zerocopy):
+                    dm = ops.bcast_trailing(dmine, pm)
+                    acc_red = acc_red.at[rd].add(jnp.where(dm, pm, 0.0))
+                    cnt_red = cnt_red.at[rd].add(jnp.where(dmine, cm, 0))
+                    delta = delta.at[rd].add(jnp.where(dm, 0.0, pm))
+                    dcnt = dcnt.at[rd].add(jnp.where(dmine, 0, cm))
+                else:
+                    acc_red = acc_red.at[rd].add(pm)
+                    cnt_red = cnt_red.at[rd].add(cm)
+                return acc_red, delta, cnt_red, dcnt
+
+            return br
+
+        solve_branches = [solve_branch(w) for w in lad_s]
+        upd_branches = [upd_branch(w) for w in lad_u]
 
         def cond(state):
             return jnp.logical_not(state["done"])
@@ -450,27 +705,55 @@ def _syncfree_device_fn(plan: Plan):
                 jnp.logical_and(lown, jnp.logical_not(solved[lr])),
                 cnt_red[lr] == indeg[lr],
             )
-            # 2. solve the frontier (masked dense over local rows)
-            xs = ops.batched_block_trsv(
-                ldiag, lb - acc_red[lr], backend=cfg.kernel_backend
-            )
-            x = x.at[lr].set(jnp.where(ops.bcast_trailing(ready, xs), xs, x[lr]))
-            solved = solved.at[lr].set(jnp.logical_or(solved[lr], ready))
-            # 3. updates from tiles whose source column solved THIS superstep
-            just = jnp.zeros((nb + 1,), jnp.bool_).at[lr].set(ready)
-            tmask = just[tcol]
-            prods = ops.batched_block_gemv(
-                tiles, x[tcol], backend=cfg.kernel_backend, group=cfg.gemv_group
-            )
-            pm = jnp.where(ops.bcast_trailing(tmask, prods), prods, 0.0)
-            cm = tmask.astype(jnp.int32)
+            if frontier:
+                # 2. compact the frontier, solve at its bucket width
+                order = jnp.sort(jnp.where(ready, iota_l, MLR).astype(jnp.int32))
+                sel = jnp.sum((lad_s_a < jnp.sum(ready)).astype(jnp.int32))
+                if len(solve_branches) == 1:
+                    x = solve_branches[0](order, acc_red, x)
+                else:
+                    x = jax.lax.switch(sel, solve_branches, order, acc_red, x)
+                solved = solved.at[lr].set(jnp.logical_or(solved[lr], ready))
+                # 3. compact the tiles sourced at this frontier, update at width
+                just = jnp.zeros((nb + 1,), jnp.bool_).at[lr].set(ready)
+                tmask = just[tcol]
+                torder = jnp.sort(jnp.where(tmask, iota_t, MLT).astype(jnp.int32))
+                usel = jnp.sum((lad_u_a < jnp.sum(tmask)).astype(jnp.int32))
+                if len(upd_branches) == 1:
+                    acc_red, delta, cnt_red, dcnt = upd_branches[0](
+                        torder, x, acc_red, delta, cnt_red, dcnt)
+                else:
+                    acc_red, delta, cnt_red, dcnt = jax.lax.switch(
+                        usel, upd_branches, torder, x, acc_red, delta,
+                        cnt_red, dcnt)
+            else:
+                # 2. solve the frontier (masked dense over local rows)
+                xs = ops.batched_block_trsv(
+                    ldiag, lb - acc_red[lr], backend=cfg.kernel_backend
+                )
+                x = x.at[lr].set(jnp.where(ops.bcast_trailing(ready, xs), xs, x[lr]))
+                solved = solved.at[lr].set(jnp.logical_or(solved[lr], ready))
+                # 3. updates from tiles whose source column solved THIS superstep
+                just = jnp.zeros((nb + 1,), jnp.bool_).at[lr].set(ready)
+                tmask = just[tcol]
+                prods = ops.batched_block_gemv(
+                    tiles, x[tcol], backend=cfg.kernel_backend, group=cfg.gemv_group
+                )
+                pm = jnp.where(ops.bcast_trailing(tmask, prods), prods, 0.0)
+                cm = tmask.astype(jnp.int32)
+                if multi and (has_ex or not zerocopy):
+                    dm = ops.bcast_trailing(dest_mine, pm)
+                    acc_red = acc_red.at[trow].add(jnp.where(dm, pm, 0.0))
+                    cnt_red = cnt_red.at[trow].add(jnp.where(dest_mine, cm, 0))
+                    delta = delta.at[trow].add(jnp.where(dm, 0.0, pm))
+                    dcnt = dcnt.at[trow].add(jnp.where(dest_mine, 0, cm))
+                else:
+                    # single device, or zerocopy with an empty cut: every
+                    # tile's destination is local, no exchange needed
+                    acc_red = acc_red.at[trow].add(pm)
+                    cnt_red = cnt_red.at[trow].add(cm)
+            # 4. exchange remote contributions
             if multi and (has_ex or not zerocopy):
-                dm = ops.bcast_trailing(dest_mine, pm)
-                acc_red = acc_red.at[trow].add(jnp.where(dm, pm, 0.0))
-                cnt_red = cnt_red.at[trow].add(jnp.where(dest_mine, cm, 0))
-                delta = delta.at[trow].add(jnp.where(dm, 0.0, pm))
-                dcnt = dcnt.at[trow].add(jnp.where(dest_mine, 0, cm))
-                # 4. exchange remote contributions
                 if has_ex:  # packed boundary rows only
                     red = jax.lax.psum(delta[exb], AXIS)
                     redc = jax.lax.psum(dcnt[exb], AXIS)
@@ -483,11 +766,6 @@ def _syncfree_device_fn(plan: Plan):
                     cnt_red = cnt_red + jax.lax.psum(dcnt, AXIS)
                     delta = jnp.zeros_like(delta)
                     dcnt = jnp.zeros_like(dcnt)
-            else:
-                # single device, or zerocopy with an empty cut: every tile's
-                # destination is local, no exchange needed
-                acc_red = acc_red.at[trow].add(pm)
-                cnt_red = cnt_red.at[trow].add(cm)
             # 5. global termination check
             remaining = jnp.sum(jnp.logical_and(lown, jnp.logical_not(solved[lr])))
             if multi:
@@ -535,18 +813,22 @@ class DistributedSolver:
 
         sharded = P(AXIS)
         repl = P()
+        backend = ops.executor_backend(plan.config.kernel_backend)
         if plan.config.sched == "levelset":
-            fn = (
-                _levelset_device_fn(plan)
-                if plan.config.comm == "zerocopy" or D == 1
-                else _levelset_unified_device_fn(plan)
-            )
+            if backend == "fused":
+                fn = _fused_levelset_device_fn(plan)
+            else:
+                fn = (
+                    _levelset_device_fn(plan)
+                    if plan.config.comm == "zerocopy" or D == 1
+                    else _levelset_unified_device_fn(plan)
+                )
             in_specs = (sharded,) * 6 + (repl, repl, repl)
             self._args = (plan.solve_rows, plan.upd_tiles, plan.tile_row,
                           plan.tile_col, plan.tiles, owner_mask, plan.diag,
                           plan.ex_rows)
         else:
-            fn = _syncfree_device_fn(plan)
+            fn = _syncfree_device_fn(plan, frontier=backend == "fused")
             in_specs = (sharded,) * 5 + (repl, repl, repl, repl)
             self._args = (plan.local_rows, plan.tile_row, plan.tile_col,
                           plan.tiles, owner_mask, plan.diag, plan.indeg,

@@ -5,6 +5,10 @@ Backends:
   default on CPU where Pallas interpret mode would be pure-Python slow.
 * ``pallas``    — the TPU kernels; on CPU they run in interpret mode
   (used by tests to validate kernel semantics), on TPU they compile natively.
+* ``fused``     — an *executor-level* backend: the levelset executors run the
+  whole compacted schedule in one Pallas superstep megakernel
+  (:mod:`repro.kernels.superstep`) and syncfree runs frontier-bucketed.
+  Individual block ops called under it fall back to the platform default.
 
 Every op accepts either a single right-hand side per tile (``(k, B)``) or a
 multi-RHS panel (``(k, B, R)``) — the panel path serves R systems from one
@@ -22,6 +26,8 @@ from repro.kernels import ref
 from repro.kernels.block_spmv import block_gemm, block_gemv, block_gemv_grouped
 from repro.kernels.block_trsv import block_trsm, block_trsv
 
+BACKENDS = ("reference", "pallas", "fused")
+
 
 def _default_backend() -> str:
     env = os.environ.get("REPRO_KERNEL_BACKEND")
@@ -30,8 +36,31 @@ def _default_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "reference"
 
 
+def executor_backend(backend: str | None = None) -> str:
+    """Resolve the executor-level backend (``fused`` selects the megakernel
+    levelset path / frontier-bucketed syncfree in ``core.solver``)."""
+    b = backend or _default_backend()
+    if b not in BACKENDS:
+        raise ValueError(f"unknown kernel backend: {b!r} (expected {BACKENDS})")
+    return b
+
+
+def op_backend(backend: str | None = None) -> str:
+    """Resolve the per-op backend; ``fused`` degrades to the platform default
+    (pallas on TPU, reference elsewhere) for the residual batched ops."""
+    b = executor_backend(backend)
+    if b == "fused":
+        b = "pallas" if jax.default_backend() == "tpu" else "reference"
+    return b
+
+
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def interpret_mode() -> bool:
+    """Whether Pallas kernels (incl. the superstep megakernel) run interpreted."""
+    return _interpret()
 
 
 def bcast_trailing(mask: jax.Array, x: jax.Array) -> jax.Array:
@@ -42,7 +71,7 @@ def bcast_trailing(mask: jax.Array, x: jax.Array) -> jax.Array:
 
 def batched_block_trsv(diag: jax.Array, rhs: jax.Array, *, backend: str | None = None,
                        algorithm: str = "rowsweep") -> jax.Array:
-    backend = backend or _default_backend()
+    backend = op_backend(backend)
     if backend == "reference":
         return ref.block_trsv_ref(diag, rhs)
     if rhs.ndim == 3:
@@ -52,7 +81,7 @@ def batched_block_trsv(diag: jax.Array, rhs: jax.Array, *, backend: str | None =
 
 def batched_block_gemv(tiles: jax.Array, xs: jax.Array, *, backend: str | None = None,
                        group: int = 0) -> jax.Array:
-    backend = backend or _default_backend()
+    backend = op_backend(backend)
     if backend == "reference":
         return ref.block_gemv_ref(tiles, xs)
     if xs.ndim == 3:

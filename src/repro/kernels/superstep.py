@@ -1,0 +1,227 @@
+"""Fused Pallas superstep megakernel for the compacted levelset schedule.
+
+The paper's zero-copy SpTRSV wins by replacing coarse per-wavefront kernel
+launches with fine-grained dependency-aware execution resident on the device.
+The ``lax.switch`` compacted executor (``core.solver``) is the XLA analogue of
+the *launch-per-superstep* baseline: every level re-dispatches a gather, a
+batched TRSV, a batched GEMV and a scatter-add as separate ops, plus one
+``switch`` branch per width-bucket combo. This module is the persistent-kernel
+analogue: **one** ``pallas_call`` executes a whole run of levels.
+
+Scalar-prefetch layout
+----------------------
+The ragged compacted schedule rides in as scalar-prefetch operands (SMEM on
+TPU, available before the kernel body runs, so schedule reads never touch
+HBM):
+
+* ``seg``  ``(2,)``   — ``[first_level, n_active_levels]`` of this launch.
+* ``off``  ``(T, 3)`` — per-level start offsets into the three flats.
+* ``wid``  ``(T, 3)`` — per-level bucket widths ``(w_solve, w_upd, w_ex)``.
+* ``sr``   ``(S,)``   — flat solve rows (device-local), pad ``-1``.
+* ``ut``   ``(U,)``   — flat update tile slots (device-local), pad ``ML``.
+* ``trow``/``tcol`` ``(ML+1,)`` — per-tile destination row / source column.
+
+Grid = one program per level; program ``p`` executes level ``seg[0] + p``
+(programs beyond ``seg[1]`` are inert padding, which lets a ``fori_loop`` over
+variable-length segments reuse one traced launch). TPU grid programs run
+sequentially on a core, so the carry buffers (``acc``, ``x``, and ``delta``
+for the unified split) persist in the output windows across levels — level
+``t+1`` reads the partial sums level ``t`` wrote without any HBM round-trip.
+Program 0 copies the incoming carries into the output windows (one copy per
+launch; see the aliasing note in :func:`superstep_call`).
+
+Each program walks its level's slice of the schedule with in-kernel loops
+bounded by the *bucket width* (dynamic trip counts, so a 3-row level costs a
+width-4 loop, not the global max): per row a dense forward substitution of the
+diagonal tile, then per tile a ``(B,B)@(B[,R])`` MXU product accumulated into
+the destination row of ``acc`` (or ``delta``). The in-kernel arithmetic
+mirrors ``block_trsv``/``block_trsm``/``block_gemv``/``block_gemm``
+expression-for-expression, so the fused kernel is bit-exact with the
+``lax.switch`` executor running the per-op Pallas backend — the property
+``tests/test_superstep.py`` pins down in interpret mode.
+
+Collectives cannot live inside a Pallas kernel, so the boundary exchange
+splits the level range into *segments* (``core.solver.fused_segments``): one
+launch per run of levels between exchanges. Single-device plans and empty
+cuts fuse the entire solve into exactly one launch.
+
+All operands ride in whole (full-array block specs): the plans this repo
+builds keep ``diag``/``tiles`` well under VMEM at the benched scales; a
+streaming variant would move the tile store to ``ANY`` and double-buffer DMA
+slices per level.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+N_PREFETCH = 7  # seg, off, wid, sr, ut, trow, tcol
+
+
+def _solve_tile(L, rhs):
+    """(B,B) lower-triangular solve of one rhs vector (B,).
+
+    Mirrors ``block_trsv._trsv_rowsweep_kernel`` op-for-op (masked full-row
+    dots over a (1,B) working vector) so results are bit-identical.
+    """
+    B = L.shape[-1]
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, B), 1)
+    r = rhs.reshape(1, B)
+
+    def body(i, x):
+        li = jax.lax.dynamic_slice(L, (i, 0), (1, B))
+        s = jnp.sum(jnp.where(col < i, li * x, 0.0))
+        lii = jnp.sum(jnp.where(col == i, li, 0.0))
+        ri = jnp.sum(jnp.where(col == i, r, 0.0))
+        xi = (ri - s) / lii
+        return jnp.where(col == i, xi, x)
+
+    return jax.lax.fori_loop(0, B, body, jnp.zeros((1, B), L.dtype))[0]
+
+
+def _solve_tile_panel(L, rhs):
+    """(B,B) solve of a (B,R) panel; mirrors ``_trsm_rowsweep_kernel``."""
+    B = L.shape[-1]
+    R = rhs.shape[-1]
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, B), 1)
+    row = jax.lax.broadcasted_iota(jnp.int32, (B, 1), 0)
+
+    def body(i, x):
+        li = jax.lax.dynamic_slice(L, (i, 0), (1, B))
+        s = jnp.dot(
+            jnp.where(col < i, li, 0.0), x, preferred_element_type=jnp.float32
+        )
+        lii = jnp.sum(jnp.where(col == i, li, 0.0))
+        ri = jax.lax.dynamic_slice(rhs, (i, 0), (1, R))
+        xi = (ri - s) / lii
+        return jnp.where(row == i, xi, x)
+
+    return jax.lax.fori_loop(0, B, body, jnp.zeros((B, R), L.dtype))
+
+
+def _superstep_kernel(
+    seg_ref, off_ref, wid_ref, sr_ref, ut_ref, trow_ref, tcol_ref,
+    diag_ref, tiles_ref, b_ref, *io_refs, multi: bool, split_delta: bool,
+):
+    if split_delta:
+        acc_in, delta_in, x_in, acc_ref, delta_ref, x_ref = io_refs
+    else:
+        acc_in, x_in, acc_ref, x_ref = io_refs
+        delta_ref = acc_ref  # tile updates land in acc (the zerocopy/local carry)
+    p = pl.program_id(0)
+
+    @pl.when(p == 0)
+    def _():  # materialize the donated carries in the output windows
+        acc_ref[...] = acc_in[...]
+        x_ref[...] = x_in[...]
+        if split_delta:
+            delta_ref[...] = delta_in[...]
+
+    t = seg_ref[0] + p
+
+    @pl.when(p < seg_ref[1])
+    def _():
+        # --- solve this level's owned rows (dynamic trip = bucket width) ---
+        o_s = off_ref[t, 0]
+
+        def solve_one(i, carry):
+            r = sr_ref[o_s + i]
+
+            @pl.when(r >= 0)
+            def _():
+                L = diag_ref[r]
+                rhs = b_ref[r] - acc_ref[r]
+                x_ref[r] = _solve_tile_panel(L, rhs) if multi else _solve_tile(L, rhs)
+
+            return carry
+
+        jax.lax.fori_loop(0, wid_ref[t, 0], solve_one, 0)
+
+        # --- owned-tile updates sourced at this level ---
+        o_u = off_ref[t, 1]
+
+        def upd_one(j, carry):
+            tid = ut_ref[o_u + j]
+            # keep the MXU product a standalone dot on materialized operands:
+            # letting XLA fuse the gathers or the accumulate into the dot
+            # changes its reduction codegen by 1 ulp vs the batched per-op
+            # kernels, breaking switch-executor bit-exactness
+            tile, xv = jax.lax.optimization_barrier(
+                (tiles_ref[tid], x_ref[tcol_ref[tid]])
+            )
+            prod = jax.lax.optimization_barrier(
+                jnp.dot(tile, xv, preferred_element_type=tile.dtype)
+            )
+            rd = trow_ref[tid]
+            delta_ref[rd] = delta_ref[rd] + prod
+            return carry
+
+        jax.lax.fori_loop(0, wid_ref[t, 1], upd_one, 0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("grid", "split_delta", "interpret")
+)
+def superstep_call(
+    seg: jax.Array,  # (2,) int32 [first_level, n_active_levels]
+    off: jax.Array,  # (T, 3) int32 level offsets into the flats
+    wid: jax.Array,  # (T, 3) int32 level bucket widths
+    sr: jax.Array,  # (S,) int32 flat solve rows, pad -1
+    ut: jax.Array,  # (U,) int32 flat tile slots, pad ML
+    trow: jax.Array,  # (ML+1,) int32
+    tcol: jax.Array,  # (ML+1,) int32
+    diag: jax.Array,  # (nb+1, B, B)
+    tiles: jax.Array,  # (ML+1, B, B)
+    b_pad: jax.Array,  # (nb+1, B) or (nb+1, B, R)
+    acc: jax.Array,
+    x: jax.Array,
+    delta: jax.Array | None = None,
+    *,
+    grid: int,
+    split_delta: bool = False,
+    interpret: bool = False,
+):
+    """One fused launch executing ``grid`` levels starting at ``seg[0]``.
+
+    Returns the updated ``(acc, x)`` carry, or ``(acc, delta, x)`` when
+    ``split_delta`` (the unified executor's not-yet-exchanged contributions
+    accumulate in ``delta`` while solves read ``acc``).
+    """
+    multi = b_pad.ndim == 3
+    assert (delta is not None) == split_delta
+    carry_in = (acc, delta, x) if split_delta else (acc, x)
+    n_carry = len(carry_in)
+
+    def vec_spec(a):
+        zeros = (0,) * a.ndim
+        return pl.BlockSpec(a.shape, lambda p, *refs: zeros)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=N_PREFETCH,
+        grid=(grid,),
+        in_specs=[vec_spec(a) for a in (diag, tiles, b_pad, *carry_in)],
+        out_specs=[vec_spec(a) for a in carry_in],
+    )
+    # The carries are deliberately NOT donated via input_output_aliases:
+    # callers init them from one zeroed array that XLA may CSE into a single
+    # buffer, and two must-alias outputs sharing one operand buffer would let
+    # x_ref writes clobber acc_ref on hardware. Program 0's explicit copy-in
+    # already pays the one copy per launch that donation would have saved.
+    kernel = functools.partial(
+        _superstep_kernel, multi=multi, split_delta=split_delta
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in carry_in),
+        interpret=interpret,
+    )(
+        seg.astype(jnp.int32), off.astype(jnp.int32), wid.astype(jnp.int32),
+        sr.astype(jnp.int32), ut.astype(jnp.int32), trow.astype(jnp.int32),
+        tcol.astype(jnp.int32), diag, tiles, b_pad, *carry_in,
+    )
+    return out

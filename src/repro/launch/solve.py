@@ -12,9 +12,12 @@ import jax
 import numpy as np
 
 from repro import compat
-from repro.core import DistributedSolver, SolverConfig, build_plan, cut_stats, metrics
+from repro.core import (
+    DistributedSolver, SolverConfig, build_plan, cut_stats, dispatch_stats, metrics,
+)
 from repro.core import partition as partition_strategies
 from repro.core.analysis import level_sets
+from repro.kernels import ops
 from repro.sparse import suite
 from repro.sparse.matrix import reference_solve
 
@@ -32,6 +35,15 @@ def main() -> None:
     ap.add_argument("--tasks-per-device", type=int, default=8)
     ap.add_argument("--block-size", type=int, default=32)
     ap.add_argument("--repeats", type=int, default=10)
+    ap.add_argument("--kernel", default="auto",
+                    choices=["auto"] + list(ops.BACKENDS),
+                    help="executor backend: 'fused' = superstep megakernel "
+                         "(levelset) / frontier-bucketed (syncfree); "
+                         "'reference'/'pallas' = lax.switch executor")
+    ap.add_argument("--rhs-hint", type=int, default=1,
+                    help="expected RHS panel width fed to the partition cost model")
+    ap.add_argument("--calibrate-cost", action="store_true",
+                    help="calibrate malleable cost weights via hlo_cost")
     args = ap.parse_args()
 
     if args.matrix == "random":
@@ -46,13 +58,25 @@ def main() -> None:
     D = len(jax.devices())
     mesh = compat.make_mesh((D,), ("x",))
     cfg = SolverConfig(block_size=args.block_size, comm=args.comm, sched=args.sched,
-                       partition=args.partition, tasks_per_device=args.tasks_per_device)
+                       partition=args.partition, tasks_per_device=args.tasks_per_device,
+                       kernel_backend=None if args.kernel == "auto" else args.kernel,
+                       rhs_hint=args.rhs_hint, calibrate_cost=args.calibrate_cost)
     plan = build_plan(a, D, cfg)
     cs = cut_stats(plan.bs, plan.part)
     print(f"[solve] D={D} block={plan.bs.B} block-levels={plan.n_levels} "
           f"boundary={cs.boundary_fraction:.0%} comm/solve={plan.comm_bytes_per_solve/1e3:.0f}KB "
           f"level-imbalance={cs.level_imbalance:.2f} "
           f"(cost {cs.level_cost_imbalance:.2f}) buckets={len(plan.buckets)}")
+    backend = ops.executor_backend(cfg.kernel_backend)
+    if args.sched == "levelset":
+        ds = dispatch_stats(plan)
+        print(f"[solve] kernel={backend} "
+              f"fused-launches={ds['fused_launches']} "
+              f"switch-dispatches={ds['switch_dispatches']} "
+              f"exchanges={ds['exchanges']}")
+    else:
+        print(f"[solve] kernel={backend} "
+              f"frontier-caps={plan.frontier_caps}")
 
     solver = DistributedSolver(plan, mesh)
     rng = np.random.default_rng(0)

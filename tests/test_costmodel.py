@@ -1,0 +1,72 @@
+"""Cost-model calibration + multi-RHS-aware block_row_cost."""
+import numpy as np
+import pytest
+
+from repro.core import costmodel
+from repro.core.blocking import build_blocks
+from repro.core.partition import (
+    DEFAULT_COST_WEIGHTS, block_row_cost, cut_stats, make_partition,
+)
+from repro.sparse.suite import random_levelled
+
+
+def _blocks(B=16):
+    return build_blocks(random_levelled(400, 10, 4.0, seed=3), B)
+
+
+def test_default_weights_reproduce_analytic_model():
+    """weights=(1,1,1), R=1 must equal the historical 1 + 2·col_tiles."""
+    bs = _blocks()
+    col_tiles = np.bincount(bs.off_cols, minlength=bs.nb)
+    np.testing.assert_allclose(block_row_cost(bs), 1.0 + 2.0 * col_tiles)
+    np.testing.assert_allclose(
+        block_row_cost(bs, weights=DEFAULT_COST_WEIGHTS, R=1),
+        1.0 + 2.0 * col_tiles)
+
+
+def test_multirhs_cost_amortizes_tile_mem():
+    """Panels scale the solve and flop terms by R but not the tile-load term,
+    so tile-heavy rows get relatively CHEAPER as R grows — the GEMM
+    amortization the partitioner should reward."""
+    bs = _blocks()
+    col_tiles = np.bincount(bs.off_cols, minlength=bs.nb)
+    c1 = block_row_cost(bs, R=1)
+    c4 = block_row_cost(bs, R=4)
+    np.testing.assert_allclose(c4, 4.0 + (1.0 + 4.0) * col_tiles)
+    # per-RHS cost of tile-heavy rows drops relative to tile-free rows
+    heavy = col_tiles.argmax()
+    light = col_tiles.argmin()
+    assert col_tiles[heavy] > col_tiles[light]
+    ratio1 = c1[heavy] / c1[light]
+    ratio4 = (c4[heavy] / 4) / (c4[light] / 4)
+    assert ratio4 < ratio1
+
+
+@pytest.mark.parametrize("backend", [None, "pallas", "fused"])
+def test_calibrate_weights_well_formed(backend):
+    w = costmodel.calibrate_weights(16, backend=backend)
+    assert len(w) == 3
+    assert w[0] == 1.0
+    assert all(np.isfinite(v) and v >= 0.0 for v in w)
+    # cached: identical object on repeat call
+    assert costmodel.calibrate_weights(16, backend=backend) is w
+
+
+def test_calibrated_weights_thread_into_malleable():
+    bs = _blocks()
+    w = costmodel.calibrate_weights(16, backend=None)
+    part = make_partition(bs, 4, "malleable", 8, cost_weights=w, cost_R=4)
+    assert part.owner.min() >= 0 and part.owner.max() < 4
+    # every block row assigned, partition is still balanced per level
+    cs = cut_stats(bs, part)
+    assert cs.level_imbalance >= 1.0
+
+
+def test_build_plan_calibrate_cost_flag():
+    from repro.core import SolverConfig, build_plan
+
+    a = random_levelled(300, 8, 3.0, seed=4)
+    plan = build_plan(a, 2, SolverConfig(
+        block_size=16, partition="malleable", calibrate_cost=True, rhs_hint=4))
+    assert plan.part.owner.shape == (plan.bs.nb,)
+    assert set(np.unique(plan.part.owner)) <= {0, 1}

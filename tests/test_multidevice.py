@@ -47,6 +47,45 @@ def test_solver_all_modes_on_8_devices():
 
 
 @pytest.mark.slow
+def test_fused_backend_bit_exact_all_modes_on_8_devices():
+    """Fused superstep megakernel / frontier-bucketed syncfree vs the
+    lax.switch / dense executors, all four sched x comm modes, on a real
+    8-device mesh. Exact-arithmetic (dyadic) values make the bitwise
+    comparison meaningful — see tests/test_superstep.py."""
+    print(run_py("""
+        import numpy as np, jax
+        from repro import compat
+        from repro.core import DistributedSolver, SolverConfig, build_plan
+        from repro.sparse import suite
+        from repro.sparse.matrix import CSR, reference_solve
+
+        a0 = suite.random_levelled(400, 8, 4.0, seed=6)
+        rows = np.repeat(np.arange(a0.n), np.diff(a0.row_ptr))
+        rng = np.random.default_rng(0)
+        signs = rng.choice(np.array([-0.5, -0.25, 0.25, 0.5], np.float32),
+                           size=a0.val.shape)
+        val = np.where(a0.col_idx == rows, 1.0, signs).astype(np.float32)
+        a = CSR(n=a0.n, row_ptr=a0.row_ptr, col_idx=a0.col_idx, val=val)
+        b = np.random.default_rng(1).integers(-4, 5, a.n).astype(np.float32)
+        x_ref = reference_solve(a, b)
+        mesh = compat.make_mesh((8,), ("x",))
+        for comm in ("zerocopy", "unified"):
+            for sched in ("levelset", "syncfree"):
+                ref_backend = "pallas" if sched == "levelset" else None
+                sw = DistributedSolver(build_plan(a, 8, SolverConfig(
+                    block_size=16, comm=comm, sched=sched,
+                    kernel_backend=ref_backend)), mesh)
+                fu = DistributedSolver(build_plan(a, 8, SolverConfig(
+                    block_size=16, comm=comm, sched=sched,
+                    kernel_backend="fused")), mesh)
+                xs, xf = sw.solve(b), fu.solve(b)
+                assert np.array_equal(xs, xf), (comm, sched)
+                assert np.array_equal(xf, x_ref.astype(np.float32)), (comm, sched)
+        print("OK")
+    """))
+
+
+@pytest.mark.slow
 def test_lm_train_step_on_4_device_mesh():
     print(run_py("""
         import jax, numpy as np

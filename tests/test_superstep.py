@@ -1,0 +1,277 @@
+"""Fused Pallas superstep megakernel vs the lax.switch compacted executor.
+
+Bit-exactness strategy: XLA does not promise a reduction order across two
+separately-compiled programs, so float comparisons between executors are only
+meaningful when the arithmetic is *exact*. The ``_dyadic`` matrices keep the
+suite's structure (skewed / banded level distributions) but substitute unit
+diagonals and ±0.25/±0.5 off-diagonal values with shallow dependency depth,
+so every intermediate is exactly representable in float32 — any two correct
+executions produce identical bits, and any schedule/masking/exchange bug in
+the fused kernel produces a loudly different answer. ``assert_array_equal``
+then really is bit-exactness. Real-valued suites ride along with the scipy
+oracle at the usual tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core import (
+    DistributedSolver, SolverConfig, build_plan, dispatch_stats,
+    fused_segments, solve_local, sptrsv,
+)
+from repro.core.blocking import pad_rhs
+from repro.core.solver import _frontier_ladder, level_widths
+from repro.kernels import ops
+from repro.sparse import suite
+from repro.sparse.matrix import CSR, reference_solve
+
+
+def _mesh1():
+    return compat.make_mesh((1,), ("x",), devices=jax.devices()[:1])
+
+
+def _dyadic(a: CSR, seed: int = 0) -> CSR:
+    """Same sparsity, exactly-representable values: unit diagonal, ±2^-k
+    off-diagonals. With the shallow (≤8 level) structures below, every
+    intermediate fits float32 exactly, making cross-executor comparisons
+    bit-meaningful."""
+    rows = np.repeat(np.arange(a.n), np.diff(a.row_ptr))
+    is_diag = a.col_idx == rows
+    rng = np.random.default_rng(seed)
+    signs = rng.choice(np.array([-0.5, -0.25, 0.25, 0.5], np.float32),
+                       size=a.val.shape)
+    val = np.where(is_diag, 1.0, signs).astype(np.float32)
+    return CSR(n=a.n, row_ptr=a.row_ptr, col_idx=a.col_idx, val=val)
+
+
+# suite-shaped structures: skewed level-size distribution and banded locality
+EXACT_MATRICES = {
+    "skewed": lambda: _dyadic(suite.random_levelled(400, 8, 4.0, seed=6)),
+    "banded": lambda: _dyadic(
+        suite.random_levelled(300, 8, 4.0, seed=7, locality=0.8)),
+}
+
+
+@pytest.fixture(scope="module", params=list(EXACT_MATRICES))
+def exact_problem(request):
+    a = EXACT_MATRICES[request.param]()
+    b = np.random.default_rng(1).integers(-4, 5, a.n).astype(np.float32)
+    x_ref = reference_solve(a, b)
+    return a, b, x_ref
+
+
+def _exactness_holds(a, b):
+    """Self-check of the test premise: the float32 solve equals the float64
+    oracle bit-for-bit, i.e. no rounding happened anywhere."""
+    x64 = reference_solve(a, b)
+    return np.array_equal(x64.astype(np.float32).astype(np.float64), x64)
+
+
+def test_dyadic_matrices_are_exact():
+    for name, make in EXACT_MATRICES.items():
+        a = make()
+        b = np.random.default_rng(1).integers(-4, 5, a.n).astype(np.float32)
+        assert _exactness_holds(a, b), name
+
+
+# ---------------------------------------------------------------------------
+# fused levelset megakernel vs the lax.switch executor
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("block_size", [8, 16])
+def test_fused_bit_exact_vs_switch(exact_problem, block_size):
+    a, b, x_ref = exact_problem
+    mesh = _mesh1()
+    sw = DistributedSolver(build_plan(
+        a, 1, SolverConfig(block_size=block_size, kernel_backend="pallas")), mesh)
+    fu = DistributedSolver(build_plan(
+        a, 1, SolverConfig(block_size=block_size, kernel_backend="fused")), mesh)
+    xs, xf = sw.solve(b), fu.solve(b)
+    np.testing.assert_array_equal(xs, xf)
+    np.testing.assert_allclose(xf, x_ref, rtol=0, atol=0)
+
+
+def test_fused_multirhs_bit_exact(exact_problem):
+    """(n, R) panels through the split trsm/gemm kernel arithmetic."""
+    a, b, _ = exact_problem
+    rng = np.random.default_rng(2)
+    B = np.column_stack([b, rng.integers(-3, 4, (a.n, 2))]).astype(np.float32)
+    mesh = _mesh1()
+    sw = DistributedSolver(build_plan(
+        a, 1, SolverConfig(block_size=16, kernel_backend="pallas")), mesh)
+    fu = DistributedSolver(build_plan(
+        a, 1, SolverConfig(block_size=16, kernel_backend="fused")), mesh)
+    Xs, Xf = sw.solve(B), fu.solve(B)
+    assert sw.n_solves == fu.n_solves == 1
+    np.testing.assert_array_equal(Xs, Xf)
+
+
+def test_solve_local_fused_bit_exact(exact_problem):
+    a, b, _ = exact_problem
+    plan_sw = build_plan(a, 1, SolverConfig(block_size=8, kernel_backend="pallas"))
+    plan_f = build_plan(a, 1, SolverConfig(block_size=8, kernel_backend="fused"))
+    bp = jnp.asarray(pad_rhs(b, plan_sw.bs))
+    np.testing.assert_array_equal(
+        np.asarray(solve_local(plan_sw, bp)), np.asarray(solve_local(plan_f, bp)))
+
+
+def test_fused_transpose_solve(exact_problem):
+    a, b, _ = exact_problem
+    mesh = _mesh1()
+    xs = sptrsv(a, b, mesh=mesh, transpose=True,
+                config=SolverConfig(block_size=16, kernel_backend="pallas"))
+    xf = sptrsv(a, b, mesh=mesh, transpose=True,
+                config=SolverConfig(block_size=16, kernel_backend="fused"))
+    np.testing.assert_array_equal(xs, xf)
+
+
+def test_fused_real_values_match_oracle():
+    """Real-valued skewed + banded suites: fused agrees with the scipy oracle
+    and with the switch executor at float tolerance (XLA fusion may differ by
+    ulps across separately-compiled programs)."""
+    mats = {
+        "skewed": suite.random_levelled(400, 24, 4.0, seed=6),
+        "banded": suite.random_levelled(300, 24, 4.0, seed=7, locality=0.8),
+    }
+    mesh = _mesh1()
+    for name, a in mats.items():
+        b = np.random.default_rng(3).uniform(-1, 1, a.n)
+        x_ref = reference_solve(a, b)
+        for sched in ("levelset", "syncfree"):
+            cfg = SolverConfig(block_size=16, sched=sched, kernel_backend="fused")
+            x = sptrsv(a, b, mesh=mesh, config=cfg)
+            np.testing.assert_allclose(x, x_ref, rtol=2e-4, atol=2e-4,
+                                       err_msg=f"{name}/{sched}")
+
+
+# ---------------------------------------------------------------------------
+# frontier-bucketed syncfree vs the dense scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("comm", ["zerocopy", "unified"])
+def test_frontier_syncfree_agrees_with_dense(exact_problem, comm):
+    a, b, x_ref = exact_problem
+    mesh = _mesh1()
+    dense = SolverConfig(block_size=16, sched="syncfree", comm=comm)
+    front = SolverConfig(block_size=16, sched="syncfree", comm=comm,
+                         kernel_backend="fused")
+    xd = sptrsv(a, b, mesh=mesh, config=dense)
+    xf = sptrsv(a, b, mesh=mesh, config=front)
+    np.testing.assert_array_equal(xd, xf)
+    np.testing.assert_allclose(xf, x_ref, rtol=0, atol=0)
+
+
+def test_frontier_syncfree_multirhs(exact_problem):
+    a, b, _ = exact_problem
+    rng = np.random.default_rng(4)
+    B = np.column_stack([b, rng.integers(-3, 4, (a.n, 2))]).astype(np.float32)
+    mesh = _mesh1()
+    dense = DistributedSolver(build_plan(
+        a, 1, SolverConfig(block_size=16, sched="syncfree")), mesh)
+    front = DistributedSolver(build_plan(
+        a, 1, SolverConfig(block_size=16, sched="syncfree",
+                           kernel_backend="fused")), mesh)
+    np.testing.assert_array_equal(dense.solve(B), front.solve(B))
+
+
+def test_frontier_work_scales_with_bucket_width(monkeypatch):
+    """Acceptance: syncfree per-superstep work scales with the frontier
+    bucket, not the device's total local rows. Recorded at trace time: the
+    dense executor's TRSV batches span all MLR local rows, the frontier
+    executor's largest branch stops at the ladder cap derived from the widest
+    block level — far below MLR on a chain-skewed matrix."""
+    a = suite.random_levelled(600, 30, 3.0, seed=8)
+    b = np.random.default_rng(5).uniform(-1, 1, a.n)
+    recorded = []
+    orig = ops.batched_block_trsv
+
+    def spy(diag, rhs, **kw):
+        recorded.append(int(diag.shape[0]))
+        return orig(diag, rhs, **kw)
+
+    monkeypatch.setattr(ops, "batched_block_trsv", spy)
+    mesh = _mesh1()
+
+    cfg_f = SolverConfig(block_size=8, sched="syncfree", kernel_backend="fused")
+    plan = build_plan(a, 1, cfg_f)
+    MLR = plan.local_rows.shape[1]
+    cap = plan.frontier_caps[0]
+    assert cap < MLR / 4, (cap, MLR)  # premise: skewed levels << local rows
+
+    sptrsv(a, b, mesh=mesh, config=cfg_f)
+    frontier_widths = set(recorded)
+    recorded.clear()
+    sptrsv(a, b, mesh=mesh, config=SolverConfig(block_size=8, sched="syncfree"))
+    dense_widths = set(recorded)
+
+    ladder = set(_frontier_ladder(min(cap, MLR)))
+    assert frontier_widths == ladder
+    assert max(frontier_widths) <= max(ladder) < MLR
+    assert MLR in dense_widths  # the dense scan really pays all local rows
+
+
+# ---------------------------------------------------------------------------
+# plan-level structure: segments, dispatch counts, ladders
+# ---------------------------------------------------------------------------
+
+
+def test_fused_segments_partition_levels(exact_problem):
+    a, _, _ = exact_problem
+    for comm, D in (("zerocopy", 1), ("zerocopy", 4), ("unified", 4)):
+        plan = build_plan(a, D, SolverConfig(block_size=16, comm=comm))
+        segs = fused_segments(plan)
+        # segments tile [0, T) exactly, in order
+        assert segs[0, 0] == 0 and segs[-1, 1] == plan.n_levels
+        np.testing.assert_array_equal(segs[1:, 0], segs[:-1, 1])
+        if comm == "unified" and D > 1:
+            assert len(segs) == plan.n_levels  # dense psum every superstep
+        if D == 1:
+            assert len(segs) == 1  # whole solve in one launch
+        wid = level_widths(plan)
+        if comm == "zerocopy" and D > 1 and plan.n_boundary_rows > 0:
+            # every segment break sits exactly before an exchange level
+            for lo in segs[1:, 0]:
+                assert wid[lo, 2] > 0
+
+
+def test_dispatch_stats_fused_wins(exact_problem):
+    a, _, _ = exact_problem
+    for D in (1, 4):
+        plan = build_plan(a, D, SolverConfig(block_size=16))
+        ds = dispatch_stats(plan)
+        assert ds["fused_launches"] == len(fused_segments(plan))
+        assert ds["fused_launches"] < ds["switch_dispatches"]
+
+
+def test_frontier_ladder_properties():
+    for cap in (1, 2, 5, 37, 1000, 123456):
+        lad = _frontier_ladder(cap)
+        assert lad[0] >= 1 and lad[-1] == cap
+        assert list(lad) == sorted(set(lad))
+        assert len(lad) <= 12
+    assert _frontier_ladder(8) == (1, 2, 4, 8)
+
+
+def test_fused_backend_env_selection(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "fused")
+    assert ops.executor_backend(None) == "fused"
+    assert ops.op_backend(None) in ("reference", "pallas")
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "bogus")
+    with pytest.raises(ValueError):
+        ops.executor_backend(None)
+
+
+def test_fused_unified_multidevice_plan_builds():
+    """Unified fused executor compiles per-level segments with the split-delta
+    carry; structure-only check here (execution is covered on 8 devices in
+    test_multidevice)."""
+    a = EXACT_MATRICES["skewed"]()
+    plan = build_plan(a, 4, SolverConfig(block_size=16, comm="unified",
+                                         kernel_backend="fused"))
+    segs = fused_segments(plan)
+    assert len(segs) == plan.n_levels
+    assert dispatch_stats(plan)["exchanges"] == plan.n_levels
