@@ -1,0 +1,113 @@
+"""Auto-mode benchmark: measured auto picks vs fixed kernel backends.
+
+For each focus suite matrix and (sched, comm) mode, times every fixed kernel
+backend candidate once, then lets the session API's auto mode (probe solves
+on) pick one. Emitted rows (per suite x mode):
+
+* ``auto/<matrix>/<sched>-<comm>``           — the auto pick's bench time.
+  Auto selects one of the fixed candidates, so its time IS that candidate's
+  single measurement (re-timing the same compiled program would only add
+  CI-runner noise, not information; all timings go through
+  ``solve_blocks`` on pre-padded arrays, the same unit ``bench_tasks``
+  uses). Derived carries the chosen backend, the probe overhead, the
+  fixed-backend spread, ``not_worse_than_slowest_fixed`` (the acceptance
+  predicate — true by construction of the measurement, kept as the
+  machine-readable acceptance record) and ``picked_best`` (the falsifiable
+  signal: did the probe ranking agree with the bench measurement?).
+* ``auto/<matrix>/<sched>-<comm>/fixed-<k>`` — each fixed backend's time.
+* ``auto/cache_hit_rate``                    — the shared context's cache hit
+  rate across the whole sweep (us_per_call pinned to 0 so the perf gate
+  never keys on it; the rate rides in the derived column).
+
+In fast (CI ``--quick``) mode this bench also emits the
+``kernel/<matrix>/{fused,switch}`` pair from its levelset-zerocopy cell —
+the rows ``compare.py``'s fused-ratio gate watches — because their usual
+producer (``bench_tasks``) only runs in full mode. Full runs leave those
+rows to ``bench_tasks`` (same plan config) to avoid duplicate names.
+
+All cells share ONE :class:`repro.api.SpTRSVContext`, so the sweep also
+exercises the analyse-once cache across modes (same pattern, many options).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_scale, emit, time_call
+from repro import compat
+from repro.api import PlanOptions, SpTRSVContext
+from repro.api.autotune import kernel_candidates
+from repro.kernels import ops
+from repro.sparse.suite import table1_suite
+
+MODES = (("levelset", "zerocopy"), ("syncfree", "zerocopy"),
+         ("levelset", "unified"))
+
+
+def main() -> None:
+    import jax
+    import os
+
+    fast = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+    focus = ("dc2",) if fast else ("dc2", "pkustk14")
+    modes = MODES[:2] if fast else MODES
+    D = min(4, len(jax.devices()))
+    mesh = compat.make_mesh((D,), ("x",), devices=jax.devices()[:D])
+    ctx = SpTRSVContext(mesh=mesh)
+    fixed_backends = kernel_candidates()  # what auto's kernel axis enumerates
+    for entry in [e for e in table1_suite(bench_scale()) if e.name in focus]:
+        a = entry.build()
+        b = np.random.default_rng(0).uniform(-1, 1, a.n)
+        b_blocks = None
+        for sched, comm in modes:
+            times = {}
+            for kb in fixed_backends:
+                opts = PlanOptions(block_size=16, sched=sched, comm=comm,
+                                   kernel=kb)
+                h = ctx.analyse(a, opts)
+                if b_blocks is None:
+                    import jax.numpy as jnp
+
+                    from repro.core.blocking import pad_rhs
+
+                    b_blocks = jnp.asarray(pad_rhs(b, h.bs))
+                ctx.solve(h, b)  # register the solve in the session counters
+                times[kb] = time_call(ctx.executor(h).solve_blocks, b_blocks)
+            auto_opts = PlanOptions(block_size=16, sched=sched, comm=comm,
+                                    kernel="auto", probe_solves=3)
+            h = ctx.analyse(a, auto_opts)
+            dec = h.auto
+            chosen = dec.chosen[2]
+            t_auto = times[chosen]  # one measurement per compiled program
+            worst = max(times.values())
+            best = min(times.values())
+            mode_tag = "interpret" if ops.interpret_mode() else "compiled"
+            fixed = ",".join(f"{k}:{v:.0f}" for k, v in times.items())
+            derived = (f"chosen={chosen};mode={dec.mode};"
+                       f"probe_overhead_us={dec.probe_overhead_us:.0f};"
+                       f"worst_fixed_us={worst:.1f};best_fixed_us={best:.1f};"
+                       f"fixed={fixed};fused_mode={mode_tag};"
+                       f"not_worse_than_slowest_fixed={t_auto <= worst};"
+                       f"picked_best={t_auto == best}")
+            emit(f"auto/{entry.name}/{sched}-{comm}", t_auto, derived)
+            for kb, t in times.items():
+                emit(f"auto/{entry.name}/{sched}-{comm}/fixed-{kb}", t,
+                     f"kernel={kb}")
+            if fast and (sched, comm) == ("levelset", "zerocopy"):
+                # quick CI runs skip bench_tasks, the usual producer of the
+                # rows the fused-ratio gate watches — emit them here (same
+                # solve_blocks measurement unit as bench_tasks) so the gate
+                # has data in every CI run
+                switch_kb = next(k for k in times if k != "fused")
+                emit(f"kernel/{entry.name}/switch", times[switch_kb],
+                     f"kernel={switch_kb};fused_mode={mode_tag}")
+                emit(f"kernel/{entry.name}/fused", times["fused"],
+                     f"kernel=fused;fused_mode={mode_tag}")
+    st = ctx.stats()
+    emit("auto/cache_hit_rate", 0.0,
+         f"hit_rate={st['cache_hit_rate']:.3f};analyses={st.get('analyses', 0)};"
+         f"solves={st.get('solves', 0)};"
+         f"solve_hits={st.get('solve_cache_hits', 0)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,7 +21,7 @@ import numpy as np
 
 from benchmarks.common import bench_scale, emit
 from repro import compat
-from repro.core import SolverConfig, build_plan
+from repro.api import PlanOptions, SpTRSVContext
 from repro.krylov import (
     DistributedSpMV,
     make_ic0_preconditioner,
@@ -44,11 +44,10 @@ def main() -> None:
         rng = np.random.default_rng(0)
         for comm, partition in (("zerocopy", "taskpool"), ("zerocopy", "malleable"),
                                 ("unified", "taskpool")):
-            cfg = SolverConfig(block_size=16, comm=comm, partition=partition)
-            plan = build_plan(a, D, cfg)
-            spmv = DistributedSpMV(plan, mesh)
-            psolve, handles = make_ic0_preconditioner(a, mesh=mesh, config=cfg,
-                                                      part=plan.part)
+            opts = PlanOptions(block_size=16, comm=comm, partition=partition)
+            ctx = SpTRSVContext(mesh=mesh, options=opts)
+            spmv = DistributedSpMV(ctx.plan(ctx.analyse(a)), mesh)
+            psolve, handles = make_ic0_preconditioner(a, context=ctx)
             fwd, bwd = handles["forward"], handles["backward"]
             for R in BATCHES:
                 b = rng.uniform(-1, 1, (a.n, R)) if R > 1 else rng.uniform(-1, 1, a.n)

@@ -8,7 +8,10 @@ malleable cost-model partition on top of the zero-copy exchange):
   zerocopy           4GPU-Zerocopy       packed exchange + task-pool (8 tasks)
   malleable          (this repo)         packed exchange + cost-model partition
 
-Derived column: speedup over `unified` (the paper's normalization).
+Derived column: speedup over `unified` (the paper's normalization). Runs
+through one :class:`repro.api.SpTRSVContext` per matrix — the five scenarios
+are one analysed pattern under different options (partition strategies fork
+the symbolic cache; comm modes share it).
 """
 from __future__ import annotations
 
@@ -16,19 +19,19 @@ import numpy as np
 
 from repro import compat
 from benchmarks.common import bench_scale, emit, time_call
-from repro.core import DistributedSolver, SolverConfig, build_plan
+from repro.api import PlanOptions, SpTRSVContext
 from repro.core.blocking import pad_rhs
 from repro.sparse.suite import table1_suite
 
 SCENARIOS = {
-    "unified": SolverConfig(block_size=16, comm="unified", partition="contiguous"),
-    "unified+task": SolverConfig(block_size=16, comm="unified", partition="taskpool",
-                                 tasks_per_device=8),
-    "shmem": SolverConfig(block_size=16, comm="zerocopy", partition="contiguous"),
-    "zerocopy": SolverConfig(block_size=16, comm="zerocopy", partition="taskpool",
+    "unified": PlanOptions(block_size=16, comm="unified", partition="contiguous"),
+    "unified+task": PlanOptions(block_size=16, comm="unified", partition="taskpool",
+                                tasks_per_device=8),
+    "shmem": PlanOptions(block_size=16, comm="zerocopy", partition="contiguous"),
+    "zerocopy": PlanOptions(block_size=16, comm="zerocopy", partition="taskpool",
+                            tasks_per_device=8),
+    "malleable": PlanOptions(block_size=16, comm="zerocopy", partition="malleable",
                              tasks_per_device=8),
-    "malleable": SolverConfig(block_size=16, comm="zerocopy", partition="malleable",
-                              tasks_per_device=8),
 }
 
 
@@ -42,12 +45,12 @@ def main() -> None:
     for entry in table1_suite(bench_scale()):
         a = entry.build()
         rng = np.random.default_rng(0)
-        b = jnp.asarray(pad_rhs(rng.uniform(-1, 1, a.n), build_plan(
-            a, 1, SolverConfig(block_size=16)).bs))
+        ctx = SpTRSVContext(mesh=mesh)
+        first = ctx.analyse(a, next(iter(SCENARIOS.values())))
+        b = jnp.asarray(pad_rhs(rng.uniform(-1, 1, a.n), first.bs))
         base_us = None
-        for name, cfg in SCENARIOS.items():
-            plan = build_plan(a, D, cfg)
-            solver = DistributedSolver(plan, mesh)
+        for name, opts in SCENARIOS.items():
+            solver = ctx.executor(ctx.analyse(a, opts))
             us = time_call(solver.solve_blocks, b)
             if name == "unified":
                 base_us = us

@@ -1,14 +1,27 @@
 """Cross-PR perf-trajectory gate (ROADMAP "Perf trajectory").
 
-Compares two bench JSON row maps (written by ``benchmarks/run.py``) and fails
-when any row shared by both regresses by more than the threshold:
+Compares a new bench JSON row map (written by ``benchmarks/run.py``) against a
+*window* of previous ``bench-trajectory`` artifacts and fails when any row
+regresses by more than the threshold against the window's per-row median:
 
-    python benchmarks/compare.py PREV.json NEW.json [--max-regression 0.25]
+    python benchmarks/compare.py PREV1.json [PREV2.json ...] NEW.json \
+        [--max-regression 0.25] [--max-fused-regression 0.25]
+
+The last path is the new run; every earlier path joins the baseline window
+(a single predecessor degenerates to the old two-file comparison). Medians
+over an N-run window keep one noisy CI run from poisoning the gate in either
+direction.
 
 Rows are matched on their full ``suite/mode`` name. Sub-threshold timings
 (default < 50us) are skipped — at that scale CI-runner jitter swamps any real
-signal. Rows present in only one file are listed informationally (new
+signal. Rows present in only one side are listed informationally (new
 benchmarks appear, retired ones disappear) but never fail the gate.
+
+A dedicated gate watches the fused-vs-switch executor ratio: for every
+``kernel/<matrix>/fused`` row with a ``kernel/<matrix>/switch`` sibling, the
+``fused/switch`` time ratio must not regress more than
+``--max-fused-regression`` vs the window's median ratio — the megakernel's
+advantage is a first-class trajectory metric, not just two independent rows.
 """
 from __future__ import annotations
 
@@ -25,11 +38,29 @@ def load_rows(path: str) -> dict:
     return {k: float(v.get("us_per_call", 0.0)) for k, v in rows.items()}
 
 
-def compare(prev: dict, new: dict, max_regression: float):
-    """Returns (regressions, improvements, skipped, zeroed) row lists."""
+def _median(vals: list) -> float:
+    vals = sorted(vals)
+    if not vals:
+        return 0.0
+    mid = len(vals) // 2
+    return vals[mid] if len(vals) % 2 else 0.5 * (vals[mid - 1] + vals[mid])
+
+
+def window_median(window: list, name: str) -> float:
+    """Median of a row's positive timings across the window (0.0 if unseen)."""
+    return _median([r[name] for r in window if r.get(name, 0.0) > 0.0])
+
+
+def compare(window: list, new: dict, max_regression: float):
+    """Returns (regressions, improvements, skipped, zeroed) row lists.
+
+    ``window`` is a list of row maps (oldest first is fine — order is
+    irrelevant, the baseline is the per-row median).
+    """
+    shared = sorted(set().union(*window) & set(new)) if window else []
     regressions, improvements, skipped, zeroed = [], [], [], []
-    for name in sorted(set(prev) & set(new)):
-        old_us, new_us = prev[name], new[name]
+    for name in shared:
+        old_us, new_us = window_median(window, name), new[name]
         if new_us <= 0.0 < old_us:
             # a previously-timed row now reports 0: the bench likely broke;
             # surface it loudly instead of burying it in the skip count
@@ -49,24 +80,61 @@ def compare(prev: dict, new: dict, max_regression: float):
     return regressions, improvements, skipped, zeroed
 
 
+def fused_ratios(rows: dict) -> dict:
+    """``matrix -> fused_us / switch_us`` for every kernel/<m>/{fused,switch}
+    pair with meaningfully-timed members (both above the noise floor)."""
+    out = {}
+    for name, fused_us in rows.items():
+        parts = name.split("/")
+        if len(parts) != 3 or parts[0] != "kernel" or parts[2] != "fused":
+            continue
+        switch_us = rows.get(f"kernel/{parts[1]}/switch", 0.0)
+        if fused_us >= MIN_US and switch_us >= MIN_US:
+            out[parts[1]] = fused_us / switch_us
+    return out
+
+
+def compare_fused(window: list, new: dict, max_regression: float):
+    """Gate the fused-vs-switch ratio against the window's median ratio."""
+    new_r = fused_ratios(new)
+    win_r = [fused_ratios(rows) for rows in window]
+    regressions = []
+    for matrix, ratio in sorted(new_r.items()):
+        base = _median([r[matrix] for r in win_r if matrix in r])
+        if base <= 0.0:
+            continue
+        if ratio > base * (1.0 + max_regression):
+            regressions.append((matrix, base, ratio))
+    return regressions
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("prev")
-    ap.add_argument("new")
+    ap.add_argument("files", nargs="+",
+                    help="previous bench JSONs (the window) then the new one")
     ap.add_argument("--max-regression", type=float, default=0.25,
-                    help="fail when new > prev * (1 + this) on any shared row")
+                    help="fail when new > window-median * (1 + this) on any row")
+    ap.add_argument("--max-fused-regression", type=float, default=0.25,
+                    help="fail when the fused/switch time ratio grows by more "
+                         "than this vs the window median")
     args = ap.parse_args(argv)
-    prev, new = load_rows(args.prev), load_rows(args.new)
+    if len(args.files) < 2:
+        ap.error("need at least one previous and one new JSON")
+    window = [load_rows(p) for p in args.files[:-1]]
+    new = load_rows(args.files[-1])
     regressions, improvements, skipped, zeroed = compare(
-        prev, new, args.max_regression)
+        window, new, args.max_regression)
+    fused_regr = compare_fused(window, new, args.max_fused_regression)
 
-    only_prev = sorted(set(prev) - set(new))
-    only_new = sorted(set(new) - set(prev))
-    print(f"[compare] {len(set(prev) & set(new))} shared rows "
+    seen_prev = set().union(*window)
+    only_prev = sorted(seen_prev - set(new))
+    only_new = sorted(set(new) - seen_prev)
+    print(f"[compare] window of {len(window)} run(s), "
+          f"{len(seen_prev & set(new))} shared rows "
           f"({len(skipped)} below {MIN_US:.0f}us noise floor), "
           f"{len(only_prev)} retired, {len(only_new)} new")
     for name, old_us in zeroed:
-        print(f"[compare] WARNING {name}: previously {old_us:.0f}us, now "
+        print(f"[compare] WARNING {name}: window median {old_us:.0f}us, now "
               f"reports 0 — benchmark broken or no longer timed")
     for name, old_us, new_us, ratio in improvements:
         print(f"[compare] improved  {name}: {old_us:.0f} -> {new_us:.0f}us "
@@ -74,9 +142,14 @@ def main(argv=None) -> int:
     for name, old_us, new_us, ratio in regressions:
         print(f"[compare] REGRESSED {name}: {old_us:.0f} -> {new_us:.0f}us "
               f"({ratio:.2f}x > {1 + args.max_regression:.2f}x)")
-    if regressions:
+    for matrix, base, ratio in fused_regr:
+        print(f"[compare] FUSED-RATIO REGRESSED kernel/{matrix}: "
+              f"fused/switch {base:.2f} -> {ratio:.2f} "
+              f"(>{1 + args.max_fused_regression:.2f}x)")
+    if regressions or fused_regr:
         print(f"[compare] FAIL: {len(regressions)} row(s) regressed "
-              f">{args.max_regression:.0%}")
+              f">{args.max_regression:.0%}, {len(fused_regr)} fused-ratio "
+              f"regression(s)")
         return 1
     print("[compare] OK")
     return 0

@@ -21,6 +21,7 @@ file name comes from ``REPRO_BENCH_JSON`` when set, else
 run against it (>25% per-row regressions fail).
 
   krylov  IC(0)-PCG iteration cost, suite x comm/partition x RHS batch
+  auto    session-API auto picks vs fixed backends + context cache hit rate
 """
 from __future__ import annotations
 
@@ -83,6 +84,8 @@ def main() -> None:
 
         # multi-device sections (subprocess with forced device count)
         print(run_with_devices("benchmarks.bench_scenarios", 4, env), end="")
+        auto_env = dict(env, REPRO_BENCH_FAST="1" if fast else "0")
+        print(run_with_devices("benchmarks.bench_auto", 4, auto_env), end="")
         if not fast:
             print(run_with_devices("benchmarks.bench_krylov", 4, env), end="")
             print(run_with_devices("benchmarks.bench_tasks", 4, env), end="")

@@ -1,7 +1,8 @@
-"""Quickstart: distributed zero-copy SpTRSV in 30 lines.
+"""Quickstart: the analyse/factorize/solve session API in 40 lines.
 
-Builds a Table-I-like sparse lower-triangular system, analyses it, and solves
-it under the paper's four design scenarios, verifying against scipy.
+Builds a Table-I-like sparse lower-triangular system, analyses it ONCE per
+option set, solves it under the paper's design scenarios, refreshes the
+numeric values without re-analysis, and lets auto mode pick the backend.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 (multi-device: XLA_FLAGS=--xla_force_host_platform_device_count=4)
@@ -10,10 +11,11 @@ import jax
 import numpy as np
 
 from repro import compat
-from repro.core import SolverConfig, build_plan, cut_stats, metrics, sptrsv
+from repro.api import PlanOptions, SpTRSVContext
+from repro.core import cut_stats, metrics
 from repro.core.analysis import level_sets
 from repro.sparse import suite
-from repro.sparse.matrix import reference_solve
+from repro.sparse.matrix import CSR, reference_solve
 
 a = suite.random_levelled(n=2000, levels=64, avg_deps=4.0, seed=0)
 m = metrics(a, level_sets(a))
@@ -27,16 +29,39 @@ D = len(jax.devices())
 mesh = compat.make_mesh((D,), ("x",))
 print(f"devices: {D}")
 
-for name, cfg in {
-    "unified (UM analogue)": SolverConfig(comm="unified", partition="contiguous"),
-    "shmem (zerocopy, contiguous)": SolverConfig(comm="zerocopy", partition="contiguous"),
-    "zerocopy + task pool": SolverConfig(comm="zerocopy", partition="taskpool"),
-    "zerocopy + malleable cost model": SolverConfig(comm="zerocopy", partition="malleable"),
-    "sync-free runtime frontier": SolverConfig(comm="zerocopy", sched="syncfree"),
+ctx = SpTRSVContext(mesh=mesh)  # one session: analyses and executors cached
+
+for name, opts in {
+    "unified (UM analogue)": PlanOptions(comm="unified", partition="contiguous"),
+    "shmem (zerocopy, contiguous)": PlanOptions(comm="zerocopy", partition="contiguous"),
+    "zerocopy + task pool": PlanOptions(comm="zerocopy", partition="taskpool"),
+    "zerocopy + malleable cost model": PlanOptions(comm="zerocopy", partition="malleable"),
+    "sync-free runtime frontier": PlanOptions(comm="zerocopy", sched="syncfree"),
 }.items():
-    x = sptrsv(a, b, mesh=mesh, config=cfg)
+    h = ctx.analyse(a, opts)
+    x = ctx.solve(h, b)
     err = np.abs(x - x_ref).max() / np.abs(x_ref).max()
-    plan = build_plan(a, D, cfg)
+    plan = ctx.plan(h)
     cs = cut_stats(plan.bs, plan.part)
     print(f"{name:32s} rel.err={err:.2e}  comm/solve={plan.comm_bytes_per_solve/1e3:.0f}KB"
           f"  level-imbalance={cs.level_imbalance:.2f}")
+
+# factorize: new numeric values on the SAME pattern — no re-analysis, the
+# compiled executors are re-armed in place (the ILU-refactorization workflow)
+a2 = CSR(n=a.n, row_ptr=a.row_ptr, col_idx=a.col_idx, val=a.val * 1.5)
+h = ctx.analyse(a, PlanOptions(comm="zerocopy", partition="taskpool"))
+ctx.factorize(a2, h)
+x2 = ctx.solve(h, b)
+err2 = np.abs(x2 - reference_solve(a2, b)).max() / np.abs(x2).max()
+print(f"{'numeric refresh (same pattern)':32s} rel.err={err2:.2e}")
+
+# auto mode: score sched x comm x kernel with the calibrated cost model
+h = ctx.analyse(a, PlanOptions.auto(probe_solves=0))
+sched, comm, kernel = h.auto.chosen
+x3 = ctx.solve(h, b)
+err3 = np.abs(x3 - x_ref).max() / np.abs(x_ref).max()
+print(f"{'auto (' + sched + '/' + comm + '/' + kernel + ')':32s} rel.err={err3:.2e}")
+
+st = ctx.stats()
+print(f"session: {st['analyses']} analyses for {st['solves']} solves, "
+      f"cache hit rate {st['cache_hit_rate']:.0%}")

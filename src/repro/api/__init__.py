@@ -1,0 +1,13 @@
+"""Session front door: analyse / factorize / solve with plan caching and
+auto-tuned backend selection (the classic sparse-solver lifecycle)."""
+from repro.api.autotune import AutoDecision, estimate_plan_cost
+from repro.api.context import SpTRSVContext, SpTRSVHandle, pattern_key
+from repro.api.options import (
+    AUTO,
+    Comm,
+    KernelBackend,
+    PartitionStrategy,
+    PlanOptions,
+    Sched,
+    as_options,
+)

@@ -10,6 +10,7 @@ from repro.core.solver import (
     build_plan,
     dispatch_stats,
     fused_segments,
+    refresh_plan,
     solve_local,
     sptrsv,
 )

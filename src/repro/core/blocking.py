@@ -40,9 +40,15 @@ class BlockStructure:
         return int(self.block_level.max()) + 1 if self.nb else 0
 
 
-def build_blocks(a: CSR, B: int) -> BlockStructure:
-    nb = -(-a.n // B)
-    n_pad = nb * B
+def _assemble_tiles(a: CSR, B: int, nb: int):
+    """Numeric tile assembly: ``(diag, off_tiles, tile_keys)``.
+
+    The single source of the dense-tile value layout, shared by
+    :func:`build_blocks` and :func:`refresh_block_values` — the refresh
+    path's bit-identity guarantee is by construction, not by keeping two
+    copies in sync. ``tile_keys`` is the sorted ``brow * nb + bcol`` id per
+    strictly-lower tile.
+    """
     rows = np.repeat(np.arange(a.n, dtype=np.int64), np.diff(a.row_ptr))
     cols = a.col_idx.astype(np.int64)
     vals = a.val
@@ -57,12 +63,16 @@ def build_blocks(a: CSR, B: int) -> BlockStructure:
 
     # --- strictly-lower tiles (dense) ---
     omask = ~dmask
-    o_brow, o_bcol = brow[omask], bcol[omask]
-    key = o_brow * nb + o_bcol
+    key = brow[omask] * nb + bcol[omask]
     uniq, inv = np.unique(key, return_inverse=True)
-    m = uniq.shape[0]
-    off_tiles = np.zeros((m, B, B), dtype=np.float32)
+    off_tiles = np.zeros((uniq.shape[0], B, B), dtype=np.float32)
     off_tiles[inv, rows[omask] % B, cols[omask] % B] = vals[omask]
+    return diag, off_tiles, uniq
+
+
+def build_blocks(a: CSR, B: int) -> BlockStructure:
+    nb = -(-a.n // B)
+    diag, off_tiles, uniq = _assemble_tiles(a, B, nb)
     off_rows = (uniq // nb).astype(np.int32)
     off_cols = (uniq % nb).astype(np.int32)
 
@@ -77,11 +87,30 @@ def build_blocks(a: CSR, B: int) -> BlockStructure:
         lo, hi = ptr[bi], ptr[bi + 1]
         if hi > lo:
             lvl[bi] = lvl[sc[lo:hi]].max() + 1
-    del n_pad
     return BlockStructure(
         n=a.n, B=B, nb=nb, diag=diag, off_rows=off_rows, off_cols=off_cols,
         off_tiles=off_tiles, block_level=lvl, block_indeg=indeg,
     )
+
+
+def refresh_block_values(bs: BlockStructure, a: CSR) -> BlockStructure:
+    """New :class:`BlockStructure` carrying ``a``'s numeric values on ``bs``'s
+    exact tile pattern — the numeric half of :func:`build_blocks` without the
+    quotient-graph analysis (levels/in-degrees are pattern properties and are
+    reused). Raises ``ValueError`` when ``a``'s block pattern differs.
+    """
+    B, nb = bs.B, bs.nb
+    if a.n != bs.n:
+        raise ValueError(f"matrix size changed: n={a.n}, analysis has n={bs.n}")
+    diag, off_tiles, uniq = _assemble_tiles(a, B, nb)
+    if not np.array_equal(
+        uniq, bs.off_rows.astype(np.int64) * nb + bs.off_cols.astype(np.int64)
+    ):
+        raise ValueError(
+            "sparsity pattern mismatch: numeric refresh requires the same "
+            "tile pattern the analysis was built on"
+        )
+    return dataclasses.replace(bs, diag=diag, off_tiles=off_tiles)
 
 
 def pad_rhs(b: np.ndarray, bs: BlockStructure) -> np.ndarray:

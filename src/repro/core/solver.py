@@ -44,16 +44,28 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+import warnings
+
 from repro import compat
-from repro.core.blocking import BlockStructure, build_blocks
-from repro.core.partition import Partition, make_partition
+from repro.core.blocking import BlockStructure, build_blocks, refresh_block_values
+from repro.core.partition import STRATEGIES, Partition, make_partition
 from repro.kernels import ops
-from repro.kernels.superstep import superstep_call
 from repro.sparse.matrix import CSR, reverse_transpose
+from repro.kernels.superstep import superstep_call
 
 AXIS = "x"  # device axis name used by the solver
 
 MAX_BUCKETS = 12  # cap on distinct (solve, update, exchange) width combos
+
+COMM_MODES = ("zerocopy", "unified")
+SCHED_MODES = ("levelset", "syncfree")
+
+
+def _check_choice(name: str, value, valid: tuple) -> None:
+    if value not in valid:
+        raise ValueError(
+            f"invalid {name}: {value!r} (valid choices: {', '.join(valid)})"
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +82,18 @@ class SolverConfig:
     gemv_group: int = 0
     rhs_hint: int = 1  # expected RHS panel width R, feeds the partition cost model
     calibrate_cost: bool = False  # calibrate cost weights via hlo_cost per backend
+
+    def __post_init__(self):
+        # Eager validation at the API boundary: a typo'd mode used to surface
+        # as an obscure failure deep inside plan construction or tracing.
+        _check_choice("comm", self.comm, COMM_MODES)
+        _check_choice("sched", self.sched, SCHED_MODES)
+        _check_choice("partition", self.partition, STRATEGIES)
+        if self.kernel_backend is not None:
+            _check_choice("kernel_backend", self.kernel_backend, ops.BACKENDS)
+        for name, lo in (("block_size", 1), ("tasks_per_device", 1), ("rhs_hint", 1)):
+            if int(getattr(self, name)) < lo:
+                raise ValueError(f"{name} must be >= {lo}, got {getattr(self, name)}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -184,6 +208,15 @@ def _bucketize_levels(
     return buckets, bucket_id, bws.astype(np.int64), bwu.astype(np.int64), bwe.astype(np.int64)
 
 
+def _tiles_by_device(bs: BlockStructure, part: Partition, D: int) -> list:
+    """Global tile ids resident on each device (tiles live on their column's
+    owner) — the one definition of the device tile-store ordering, shared by
+    :func:`build_plan` and :func:`refresh_plan` so a refresh scatters values
+    into exactly the slots the compiled executors index."""
+    tile_dev = part.owner[bs.off_cols]
+    return [np.nonzero(tile_dev == d)[0] for d in range(D)]
+
+
 def build_plan(
     a: CSR, n_devices: int, config: SolverConfig = SolverConfig(),
     *, transpose: bool = False, part: Partition | None = None,
@@ -221,7 +254,7 @@ def build_plan(
 
     # --- per-device tile stores (tiles live on their column's owner) ---
     tile_dev = part.owner[bs.off_cols]
-    per_dev_tiles = [np.nonzero(tile_dev == d)[0] for d in range(D)]
+    per_dev_tiles = _tiles_by_device(bs, part, D)
     ML = max((t.shape[0] for t in per_dev_tiles), default=0)
     tiles = np.zeros((D, ML + 1, B, B), dtype=np.float32)
     tile_row = np.full((D, ML + 1), nb, dtype=np.int32)
@@ -290,6 +323,29 @@ def build_plan(
         frontier_caps=(max(1, int(ws.max())) if T else 1,
                        max(1, int(wu.max())) if T else 1),
     )
+
+
+def refresh_plan(plan: Plan, a: CSR) -> Plan:
+    """Numeric refresh: a new :class:`Plan` carrying ``a``'s values on
+    ``plan``'s exact pattern, partition, and compacted schedules.
+
+    This is the *factorize* stage of the analyse/factorize/solve lifecycle:
+    ILU-style refactorization changes tile values but never the sparsity, so
+    everything symbolic (blocking, levels, partition, bucketized schedules,
+    the compiled executors' trace) is reused and only ``diag``/``tiles`` are
+    rebuilt — bit-identically to what a fresh :func:`build_plan` on the same
+    pattern would produce. Transpose plans refresh through the same row/column
+    reversal they were built with.
+    """
+    if plan.transpose:
+        a = reverse_transpose(a)
+    bs = refresh_block_values(plan.bs, a)
+    B, D = bs.B, plan.n_devices
+    diag = np.concatenate([bs.diag, np.eye(B, dtype=np.float32)[None]], axis=0)
+    tiles = np.zeros_like(plan.tiles)
+    for d, ids in enumerate(_tiles_by_device(bs, plan.part, D)):
+        tiles[d, : ids.shape[0]] = bs.off_tiles[ids]
+    return dataclasses.replace(plan, bs=bs, diag=diag, tiles=tiles)
 
 
 # ---------------------------------------------------------------------------
@@ -824,19 +880,46 @@ class DistributedSolver:
                     else _levelset_unified_device_fn(plan)
                 )
             in_specs = (sharded,) * 6 + (repl, repl, repl)
-            self._args = (plan.solve_rows, plan.upd_tiles, plan.tile_row,
-                          plan.tile_col, plan.tiles, owner_mask, plan.diag,
-                          plan.ex_rows)
         else:
             fn = _syncfree_device_fn(plan, frontier=backend == "fused")
             in_specs = (sharded,) * 5 + (repl, repl, repl, repl)
-            self._args = (plan.local_rows, plan.tile_row, plan.tile_col,
-                          plan.tiles, owner_mask, plan.diag, plan.indeg,
-                          plan.ex_boundary)
+        self._args = self._plan_args(plan)
         mapped = compat.shard_map(
             fn, mesh=mesh, in_specs=in_specs, out_specs=P(),
         )
         self._jitted = jax.jit(mapped)
+
+    def _plan_args(self, plan: Plan) -> tuple:
+        if plan.config.sched == "levelset":
+            return (plan.solve_rows, plan.upd_tiles, plan.tile_row,
+                    plan.tile_col, plan.tiles, self._owner_mask, plan.diag,
+                    plan.ex_rows)
+        return (plan.local_rows, plan.tile_row, plan.tile_col,
+                plan.tiles, self._owner_mask, plan.diag, plan.indeg,
+                plan.ex_boundary)
+
+    def refresh(self, plan: Plan) -> None:
+        """Swap in a numerically refreshed plan (:func:`refresh_plan`) without
+        recompiling: the executor trace bakes in the *schedules*, while tile
+        and diagonal values ride in as jit arguments — same shapes, same
+        compiled program, zero retrace."""
+        old = self.plan
+        # the compiled trace bakes the old schedule in as constants, so a
+        # structurally different plan would silently pair new values with the
+        # wrong schedule — reject it loudly (never an assert: -O must not
+        # disable this)
+        if not (plan.config == old.config and plan.n_devices == old.n_devices
+                and plan.transpose == old.transpose
+                and np.array_equal(plan.solve_rows, old.solve_rows)
+                and np.array_equal(plan.lvl_off, old.lvl_off)
+                and np.array_equal(plan.local_rows, old.local_rows)
+                and np.array_equal(plan.tile_row, old.tile_row)):
+            raise ValueError(
+                "refresh requires an identical symbolic schedule (same "
+                "pattern, config, and device count as the compiled plan)"
+            )
+        self.plan = plan
+        self._args = self._plan_args(plan)
 
     def solve_blocks(self, b_blocks: jax.Array) -> jax.Array:
         """b_blocks: (nb, B) or a multi-RHS panel (nb, B, R) -> same shape."""
@@ -863,8 +946,18 @@ def sptrsv(
     a: CSR, b: np.ndarray, *, mesh: jax.sharding.Mesh | None = None,
     config: SolverConfig = SolverConfig(), transpose: bool = False,
 ) -> np.ndarray:
-    """One-shot convenience API: analyse, plan, solve Lx=b (or L^T x=b)."""
-    if mesh is None:
-        mesh = compat.make_mesh((1,), (AXIS,))
-    plan = build_plan(a, int(mesh.devices.size), config, transpose=transpose)
-    return DistributedSolver(plan, mesh).solve(b)
+    """Deprecated one-shot API: analyse, plan, solve Lx=b (or L^T x=b).
+
+    Kept as a thin shim over :class:`repro.api.SpTRSVContext` — it re-runs the
+    full analysis on every call, which is exactly the cost the session API
+    amortizes. New code should hold a context and call
+    ``ctx.solve(ctx.analyse(a), b)``.
+    """
+    warnings.warn(
+        "repro.core.sptrsv is deprecated: use repro.api.SpTRSVContext "
+        "(analyse once, factorize/solve many)", DeprecationWarning, stacklevel=2,
+    )
+    from repro.api import SpTRSVContext
+
+    ctx = SpTRSVContext(mesh=mesh, options=config)
+    return ctx.solve(ctx.analyse(a), b, transpose=transpose)

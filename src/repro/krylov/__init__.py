@@ -1,6 +1,8 @@
 """Krylov + preconditioner subsystem: distributed SpTRSV as the hot path of
 real iterative solves (paper §I motivation)."""
 from repro.krylov.api import (
+    IC0Preconditioner,
+    ILU0Preconditioner,
     make_ic0_preconditioner,
     make_ilu0_preconditioner,
     solve_cg,

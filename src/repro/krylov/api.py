@@ -1,12 +1,22 @@
-"""Front door of the Krylov subsystem, mirroring :func:`repro.core.sptrsv`.
+"""Front door of the Krylov subsystem — a client of the session API.
 
-``solve_ic0_pcg(A, b, mesh=..., config=...)`` takes the lower-triangular half
-of a symmetric matrix (the repo's SPD convention), factorizes it in place of
-pattern, compiles THREE distributed executables once — the SpMV and the
-forward/backward triangular solves — and then iterates with zero
-re-compilation: the paper's amortized regime, where the solver is invoked
-hundreds of times per run. Every returned result carries the live handles in
-``result.info`` so callers (and tests) can audit invocation counts.
+``solve_ic0_pcg(A, b, ...)`` takes the lower-triangular half of a symmetric
+matrix (the repo's SPD convention) and runs the paper's amortized regime
+through one :class:`repro.api.SpTRSVContext`: the pattern is **analysed
+once** (block structure + partition + schedules), the IC(0) factor is
+**factorized** into that same analysis as a numeric refresh (zero-fill means
+the factor shares the matrix pattern exactly), and the forward/backward
+triangular sweeps are context **solves** on cached compiled executors — the
+L^T sweep is a lazy transpose extension of the same handle, not a second
+analysis. Every returned result carries the live context/handles in
+``result.info`` so callers (and tests) can audit analysis and invocation
+counts.
+
+Preconditioners are durable objects: :class:`IC0Preconditioner` /
+:class:`ILU0Preconditioner` support ``refresh(new_matrix)`` — re-running the
+numeric factorization on new values of the SAME pattern and re-arming the
+compiled executors in place, the piece refactorization workflows previously
+faked by rebuilding plans from scratch.
 """
 from __future__ import annotations
 
@@ -14,7 +24,8 @@ import jax
 import numpy as np
 
 from repro import compat
-from repro.core.solver import AXIS, DistributedSolver, SolverConfig, build_plan
+from repro.api import PlanOptions, SpTRSVContext, as_options
+from repro.core.solver import AXIS, SolverConfig
 from repro.krylov.bicgstab import bicgstab
 from repro.krylov.cg import KrylovResult, pcg
 from repro.krylov.precond import ic0, ilu0, symmetric_full_csr, upper_as_reversed_lower
@@ -26,75 +37,147 @@ def _default_mesh(mesh: jax.sharding.Mesh | None) -> jax.sharding.Mesh:
     return mesh if mesh is not None else compat.make_mesh((1,), (AXIS,))
 
 
+def _context(mesh, config, context) -> SpTRSVContext:
+    if context is not None:
+        return context
+    return SpTRSVContext(mesh=_default_mesh(mesh), options=as_options(config))
+
+
+class IC0Preconditioner:
+    """``M^{-1} r = L^-T L^-1 r`` with IC(0) ``L`` on ``a_lower``'s pattern.
+
+    Both sweeps run through the context's cached executors on ONE analysis —
+    the factor handle is tagged ``"ic0"``, so it shares the pattern's
+    symbolic analysis with the matrix itself but holds the factor's values
+    independently. ``refresh(a_lower_new)`` refactorizes new values on the
+    same pattern and re-arms the executors without re-partitioning or
+    recompiling.
+    """
+
+    TAG = "ic0"
+
+    def __init__(self, ctx: SpTRSVContext, a_lower: CSR):
+        self.ctx = ctx
+        self.factor = ic0(a_lower)
+        self.handle = ctx.factorize(self.factor, tag=self.TAG)
+
+    def refresh(self, a_lower: CSR) -> "IC0Preconditioner":
+        self.factor = ic0(a_lower)
+        self.ctx.factorize(self.factor, self.handle)
+        return self
+
+    def __call__(self, r: np.ndarray) -> np.ndarray:
+        y = self.ctx.solve(self.handle, r)
+        return self.ctx.solve(self.handle, y, transpose=True)
+
+
+class ILU0Preconditioner:
+    """``M^{-1} r = U^-1 L^-1 r`` with ILU(0) factors of a full CSR.
+
+    The unit-lower factor lives on the strict-lower + diagonal pattern and
+    shares that pattern's symbolic analysis (tag ``"ilu0-L"``); the U sweep
+    runs as a transpose solve of the reversed ``U^T`` under tag ``"ilu0-U"``
+    — on a symmetric pattern that too shares the SAME analysis (``U^T`` has
+    L's pattern), so the whole L/U pair costs one partition.
+    """
+
+    def __init__(self, ctx: SpTRSVContext, a_full: CSR):
+        self.ctx = ctx
+        self._lower_handle = None
+        self._upper_handle = None
+        self._factorize(a_full)
+
+    def _factorize(self, a_full: CSR) -> None:
+        self.lower, self.upper = ilu0(a_full)
+        # after the first factorization, pass the handles explicitly so a
+        # pattern change raises instead of silently re-analysing
+        self._lower_handle = self.ctx.factorize(
+            self.lower, self._lower_handle, tag="ilu0-L")
+        self._upper_handle = self.ctx.factorize(
+            upper_as_reversed_lower(self.upper), self._upper_handle, tag="ilu0-U")
+
+    def refresh(self, a_full: CSR) -> "ILU0Preconditioner":
+        self._factorize(a_full)
+        return self
+
+    def __call__(self, r: np.ndarray) -> np.ndarray:
+        y = self.ctx.solve(self._lower_handle, r)
+        return self.ctx.solve(self._upper_handle, y, transpose=True)
+
+
 def make_ic0_preconditioner(
     a_lower: CSR, *, mesh: jax.sharding.Mesh | None = None,
-    config: SolverConfig = SolverConfig(), part=None,
+    config: SolverConfig | PlanOptions | None = None, part=None,
+    context: SpTRSVContext | None = None,
 ) -> tuple:
-    """IC(0)-factorize and compile the solve pair ``M^{-1} r = L^-T L^-1 r``.
+    """IC(0)-factorize and wire the solve pair ``M^{-1} r = L^-T L^-1 r``.
 
-    Returns ``(psolve, handles)`` where both the ``L`` (forward) and ``L^T``
-    (backward/transpose) sweeps run through :class:`DistributedSolver`.
-    ``part`` reuses a partition built for ``a_lower``'s pattern (zero fill-in
-    means the factor shares it exactly).
+    Returns ``(psolve, handles)``; ``psolve`` is an :class:`IC0Preconditioner`
+    (callable, refreshable). ``handles`` keeps the legacy keys (``factor``,
+    ``forward``, ``backward`` executors with ``n_solves`` audit counters) plus
+    ``context``/``handle``/``preconditioner``. ``part`` is accepted for
+    backward compatibility but superseded: partition reuse now happens through
+    the context's pattern cache.
     """
-    mesh = _default_mesh(mesh)
-    D = int(mesh.devices.size)
-    factor = ic0(a_lower)
-    forward = DistributedSolver(build_plan(factor, D, config, part=part), mesh)
-    backward = DistributedSolver(build_plan(factor, D, config, transpose=True), mesh)
-
-    def psolve(r: np.ndarray) -> np.ndarray:
-        return backward.solve(forward.solve(r))
-
-    return psolve, {"factor": factor, "forward": forward, "backward": backward}
+    del part  # superseded by the context's single analysis per pattern
+    ctx = _context(mesh, config, context)
+    pre = IC0Preconditioner(ctx, a_lower)
+    return pre, {
+        "factor": pre.factor,
+        "forward": ctx.executor(pre.handle),
+        "backward": ctx.executor(pre.handle, transpose=True),
+        "context": ctx, "handle": pre.handle, "preconditioner": pre,
+    }
 
 
 def make_ilu0_preconditioner(
     a_full: CSR, *, mesh: jax.sharding.Mesh | None = None,
-    config: SolverConfig = SolverConfig(), part=None,
+    config: SolverConfig | PlanOptions | None = None, part=None,
+    context: SpTRSVContext | None = None,
 ) -> tuple:
-    """ILU(0)-factorize a full CSR and compile ``M^{-1} r = U^-1 L^-1 r``."""
-    mesh = _default_mesh(mesh)
-    D = int(mesh.devices.size)
-    lower, upper = ilu0(a_full)
-    forward = DistributedSolver(build_plan(lower, D, config, part=part), mesh)
-    backward = DistributedSolver(
-        build_plan(upper_as_reversed_lower(upper), D, config, transpose=True), mesh
-    )
-
-    def psolve(r: np.ndarray) -> np.ndarray:
-        return backward.solve(forward.solve(r))
-
-    return psolve, {"lower": lower, "upper": upper,
-                    "forward": forward, "backward": backward}
+    """ILU(0)-factorize a full CSR and wire ``M^{-1} r = U^-1 L^-1 r``."""
+    del part  # superseded by the context's single analysis per pattern
+    ctx = _context(mesh, config, context)
+    pre = ILU0Preconditioner(ctx, a_full)
+    return pre, {
+        "lower": pre.lower, "upper": pre.upper,
+        "forward": ctx.executor(pre._lower_handle),
+        "backward": ctx.executor(pre._upper_handle, transpose=True),
+        "context": ctx, "preconditioner": pre,
+    }
 
 
 def solve_cg(
     a_lower: CSR, b: np.ndarray, *, mesh: jax.sharding.Mesh | None = None,
-    config: SolverConfig = SolverConfig(), tol: float = 1e-8, maxiter: int = 2000,
+    config: SolverConfig | PlanOptions | None = None, tol: float = 1e-8,
+    maxiter: int = 2000, context: SpTRSVContext | None = None,
 ) -> KrylovResult:
     """Unpreconditioned CG baseline (distributed SpMV, no triangular solves)."""
-    mesh = _default_mesh(mesh)
-    spmv = DistributedSpMV(build_plan(a_lower, int(mesh.devices.size), config), mesh)
+    ctx = _context(mesh, config, context)
+    spmv = DistributedSpMV(ctx.plan(ctx.analyse(a_lower)), ctx.mesh)
     res = pcg(spmv.matvec, b, tol=tol, maxiter=maxiter)
-    res.info.update(spmv=spmv)
+    res.info.update(spmv=spmv, context=ctx)
     return res
 
 
 def solve_ic0_pcg(
     a_lower: CSR, b: np.ndarray, *, mesh: jax.sharding.Mesh | None = None,
-    config: SolverConfig = SolverConfig(), tol: float = 1e-8, maxiter: int = 2000,
+    config: SolverConfig | PlanOptions | None = None, tol: float = 1e-8,
+    maxiter: int = 2000, context: SpTRSVContext | None = None,
 ) -> KrylovResult:
-    """PCG with an IC(0) preconditioner — both triangular sweeps are
-    distributed SpTRSV solves on one compiled plan each, reused every
-    iteration. ``b`` may be ``(n,)`` or an ``(n, R)`` panel."""
-    mesh = _default_mesh(mesh)
-    plan_a = build_plan(a_lower, int(mesh.devices.size), config)
-    spmv = DistributedSpMV(plan_a, mesh)
-    # zero fill-in: the IC(0) factor shares a_lower's pattern, so the matrix
-    # partition is reused for the forward sweep instead of re-analysed
-    psolve, handles = make_ic0_preconditioner(a_lower, mesh=mesh, config=config,
-                                              part=plan_a.part)
+    """PCG with an IC(0) preconditioner — the paper's amortized regime.
+
+    Exactly ONE analysis happens for ``a_lower``'s pattern: the SpMV reads
+    the analysis plan with A's values, then the IC(0) factor is numerically
+    refreshed into the same handle and both triangular sweeps (forward and
+    the lazy transpose extension) solve against it every iteration. ``b`` may
+    be ``(n,)`` or an ``(n, R)`` panel.
+    """
+    ctx = _context(mesh, config, context)
+    # the matrix handle (untagged) keeps A's values for the SpMV; the factor
+    # lives on a tagged handle sharing the same single symbolic analysis
+    spmv = DistributedSpMV(ctx.plan(ctx.analyse(a_lower)), ctx.mesh)
+    psolve, handles = make_ic0_preconditioner(a_lower, context=ctx)
     res = pcg(spmv.matvec, b, psolve=psolve, tol=tol, maxiter=maxiter)
     res.info.update(spmv=spmv, **handles)
     return res
@@ -102,18 +185,17 @@ def solve_ic0_pcg(
 
 def solve_ilu0_bicgstab(
     a_lower: CSR, b: np.ndarray, *, mesh: jax.sharding.Mesh | None = None,
-    config: SolverConfig = SolverConfig(), tol: float = 1e-8, maxiter: int = 2000,
+    config: SolverConfig | PlanOptions | None = None, tol: float = 1e-8,
+    maxiter: int = 2000, context: SpTRSVContext | None = None,
 ) -> KrylovResult:
     """BiCGStab with an ILU(0) preconditioner built from the full symmetric
-    expansion of ``a_lower`` (L and U sweeps are distinct compiled solves;
-    two preconditioner applications per iteration)."""
-    mesh = _default_mesh(mesh)
-    plan_a = build_plan(a_lower, int(mesh.devices.size), config)
-    spmv = DistributedSpMV(plan_a, mesh)
-    # ILU(0)'s unit-lower factor also lives on a_lower's pattern (strict lower
-    # of the symmetric expansion + diagonal) -> same partition applies
+    expansion of ``a_lower``. The unit-lower factor shares ``a_lower``'s
+    pattern (and therefore its analysis); only the reversed-U pattern adds a
+    second analysis."""
+    ctx = _context(mesh, config, context)
+    spmv = DistributedSpMV(ctx.plan(ctx.analyse(a_lower)), ctx.mesh)
     psolve, handles = make_ilu0_preconditioner(
-        symmetric_full_csr(a_lower), mesh=mesh, config=config, part=plan_a.part
+        symmetric_full_csr(a_lower), context=ctx
     )
     res = bicgstab(spmv.matvec, b, psolve=psolve, tol=tol, maxiter=maxiter)
     res.info.update(spmv=spmv, **handles)

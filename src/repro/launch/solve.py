@@ -2,7 +2,10 @@
 
 Solves Lx=b for a Table-I-suite matrix (or synthetic parameters) under a
 chosen design scenario, verifying against scipy and reporting the paper
-metrics + communication volume.
+metrics + communication volume. Runs through the session API
+(:class:`repro.api.SpTRSVContext`); pass ``auto`` for ``--sched``/``--comm``/
+``--kernel`` to let the calibrated cost model (plus ``--probe N`` measured
+probe solves) pick the execution mode.
 """
 from __future__ import annotations
 
@@ -12,9 +15,8 @@ import jax
 import numpy as np
 
 from repro import compat
-from repro.core import (
-    DistributedSolver, SolverConfig, build_plan, cut_stats, dispatch_stats, metrics,
-)
+from repro.api import PlanOptions, SpTRSVContext
+from repro.core import cut_stats, metrics
 from repro.core import partition as partition_strategies
 from repro.core.analysis import level_sets
 from repro.kernels import ops
@@ -28,18 +30,24 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=0.1)
     ap.add_argument("--n", type=int, default=2000)
     ap.add_argument("--levels", type=int, default=64)
-    ap.add_argument("--comm", default="zerocopy", choices=["zerocopy", "unified"])
-    ap.add_argument("--sched", default="levelset", choices=["levelset", "syncfree"])
+    ap.add_argument("--comm", default="zerocopy",
+                    choices=["zerocopy", "unified", "auto"])
+    ap.add_argument("--sched", default="levelset",
+                    choices=["levelset", "syncfree", "auto"])
     ap.add_argument("--partition", default="taskpool",
                     choices=list(partition_strategies.STRATEGIES))
     ap.add_argument("--tasks-per-device", type=int, default=8)
     ap.add_argument("--block-size", type=int, default=32)
     ap.add_argument("--repeats", type=int, default=10)
-    ap.add_argument("--kernel", default="auto",
-                    choices=["auto"] + list(ops.BACKENDS),
+    ap.add_argument("--kernel", default="default",
+                    choices=["default", "auto"] + list(ops.BACKENDS),
                     help="executor backend: 'fused' = superstep megakernel "
                          "(levelset) / frontier-bucketed (syncfree); "
-                         "'reference'/'pallas' = lax.switch executor")
+                         "'reference'/'pallas' = lax.switch executor; "
+                         "'auto' = cost-model / probe selection")
+    ap.add_argument("--probe", type=int, default=0,
+                    help="measured probe solves per auto candidate "
+                         "(0 = cost-model only)")
     ap.add_argument("--rhs-hint", type=int, default=1,
                     help="expected RHS panel width fed to the partition cost model")
     ap.add_argument("--calibrate-cost", action="store_true",
@@ -57,19 +65,29 @@ def main() -> None:
 
     D = len(jax.devices())
     mesh = compat.make_mesh((D,), ("x",))
-    cfg = SolverConfig(block_size=args.block_size, comm=args.comm, sched=args.sched,
-                       partition=args.partition, tasks_per_device=args.tasks_per_device,
-                       kernel_backend=None if args.kernel == "auto" else args.kernel,
-                       rhs_hint=args.rhs_hint, calibrate_cost=args.calibrate_cost)
-    plan = build_plan(a, D, cfg)
+    opts = PlanOptions(
+        block_size=args.block_size, comm=args.comm, sched=args.sched,
+        partition=args.partition, tasks_per_device=args.tasks_per_device,
+        kernel=args.kernel, rhs_hint=args.rhs_hint,
+        calibrate_cost=args.calibrate_cost, probe_solves=args.probe,
+    )
+    ctx = SpTRSVContext(mesh=mesh, options=opts)
+    handle = ctx.analyse(a)
+    plan = ctx.plan(handle)
     cs = cut_stats(plan.bs, plan.part)
     print(f"[solve] D={D} block={plan.bs.B} block-levels={plan.n_levels} "
           f"boundary={cs.boundary_fraction:.0%} comm/solve={plan.comm_bytes_per_solve/1e3:.0f}KB "
           f"level-imbalance={cs.level_imbalance:.2f} "
           f"(cost {cs.level_cost_imbalance:.2f}) buckets={len(plan.buckets)}")
+    ds = ctx.dispatch_stats(handle)
+    cfg = handle.config
     backend = ops.executor_backend(cfg.kernel_backend)
-    if args.sched == "levelset":
-        ds = dispatch_stats(plan)
+    if handle.auto is not None:
+        sched, comm, kernel = handle.auto.chosen
+        print(f"[solve] auto: sched={sched} comm={comm} kernel={kernel} "
+              f"({handle.auto.mode}, probe-overhead "
+              f"{handle.auto.probe_overhead_us/1e3:.1f}ms)")
+    if cfg.sched == "levelset":
         print(f"[solve] kernel={backend} "
               f"fused-launches={ds['fused_launches']} "
               f"switch-dispatches={ds['switch_dispatches']} "
@@ -78,18 +96,19 @@ def main() -> None:
         print(f"[solve] kernel={backend} "
               f"frontier-caps={plan.frontier_caps}")
 
-    solver = DistributedSolver(plan, mesh)
     rng = np.random.default_rng(0)
     import time
 
     b = rng.uniform(-1, 1, a.n)
-    x = solver.solve(b)  # compile
+    x = ctx.solve(handle, b)  # compile
     t0 = time.perf_counter()
     for _ in range(args.repeats):
-        x = solver.solve(b)
+        x = ctx.solve(handle, b)
     dt = (time.perf_counter() - t0) / args.repeats
     err = np.abs(x - reference_solve(a, b)).max() / np.abs(x).max()
-    print(f"[solve] {dt*1e3:.2f} ms/solve over {args.repeats} runs, rel.err {err:.2e}")
+    st = ctx.stats()
+    print(f"[solve] {dt*1e3:.2f} ms/solve over {args.repeats} runs, rel.err {err:.2e} "
+          f"(cache hit rate {st['cache_hit_rate']:.0%})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,86 @@
+"""Perf-trajectory gate: N-run window medians and the fused-vs-switch ratio."""
+import json
+
+import pytest
+
+from benchmarks.compare import compare, compare_fused, fused_ratios, main
+
+
+def rows(**kv):
+    return {k: float(v) for k, v in kv.items()}
+
+
+def test_window_median_is_baseline():
+    window = [rows(a=100.0), rows(a=1000.0), rows(a=110.0)]
+    # median 110 absorbs the one noisy 1000us run; 120 is within 25%
+    regs, imps, skipped, zeroed = compare(window, rows(a=120.0), 0.25)
+    assert not regs and not imps
+    regs, _, _, _ = compare(window, rows(a=200.0), 0.25)
+    assert [r[0] for r in regs] == ["a"]
+    assert regs[0][1] == pytest.approx(110.0)  # baseline = window median
+
+
+def test_single_predecessor_degenerates_to_pairwise():
+    regs, imps, _, _ = compare([rows(a=100.0)], rows(a=130.0), 0.25)
+    assert [r[0] for r in regs] == ["a"]
+    regs, imps, _, _ = compare([rows(a=100.0)], rows(a=70.0), 0.25)
+    assert not regs and [i[0] for i in imps] == ["a"]
+
+
+def test_noise_floor_and_zeroed_rows():
+    window = [rows(tiny=10.0, broken=500.0)]
+    regs, _, skipped, zeroed = compare(
+        window, rows(tiny=40.0, broken=0.0), 0.25)
+    assert not regs
+    assert "tiny" in skipped  # both below the 50us noise floor
+    assert zeroed == [("broken", 500.0)]
+
+
+def test_row_only_in_window_or_new_never_fails():
+    regs, _, _, _ = compare([rows(old=100.0)], rows(new=100.0), 0.25)
+    assert not regs
+
+
+def test_fused_ratio_extraction():
+    r = fused_ratios({"kernel/dc2/fused": 200.0, "kernel/dc2/switch": 100.0,
+                      "kernel/x/fused": 10.0, "kernel/x/switch": 10.0,
+                      "fig9/dc2/tasks4": 100.0})
+    assert r == {"dc2": 2.0}  # sub-noise-floor pair and non-kernel rows ignored
+
+
+def test_fused_gate_regression():
+    window = [
+        {"kernel/dc2/fused": 150.0, "kernel/dc2/switch": 100.0},
+        {"kernel/dc2/fused": 170.0, "kernel/dc2/switch": 100.0},
+    ]
+    ok = {"kernel/dc2/fused": 180.0, "kernel/dc2/switch": 100.0}
+    assert compare_fused(window, ok, 0.25) == []
+    # both rows got slower proportionally: per-row gate may pass, the RATIO
+    # gate still catches the megakernel's advantage eroding
+    bad = {"kernel/dc2/fused": 260.0, "kernel/dc2/switch": 100.0}
+    regs = compare_fused(window, bad, 0.25)
+    assert [m for m, _, _ in regs] == ["dc2"]
+    base, ratio = regs[0][1], regs[0][2]
+    assert base == pytest.approx(1.6) and ratio == pytest.approx(2.6)
+
+
+def test_cli_window_and_exit_codes(tmp_path):
+    def dump(name, data):
+        p = tmp_path / name
+        p.write_text(json.dumps(
+            {k: {"us_per_call": v, "derived": ""} for k, v in data.items()}))
+        return str(p)
+
+    prev1 = dump("p1.json", {"a": 100.0, "kernel/m/fused": 150.0,
+                             "kernel/m/switch": 100.0})
+    prev2 = dump("p2.json", {"a": 120.0, "kernel/m/fused": 160.0,
+                             "kernel/m/switch": 100.0})
+    good = dump("good.json", {"a": 115.0, "kernel/m/fused": 155.0,
+                              "kernel/m/switch": 100.0})
+    assert main([prev1, prev2, good]) == 0
+    slow = dump("slow.json", {"a": 400.0, "kernel/m/fused": 155.0,
+                              "kernel/m/switch": 100.0})
+    assert main([prev1, prev2, slow]) == 1
+    ratio_bad = dump("ratio.json", {"a": 115.0, "kernel/m/fused": 300.0,
+                                    "kernel/m/switch": 100.0})
+    assert main([prev1, prev2, ratio_bad]) == 1

@@ -86,6 +86,43 @@ def test_fused_backend_bit_exact_all_modes_on_8_devices():
 
 
 @pytest.mark.slow
+def test_numeric_refresh_bit_identical_all_modes_on_8_devices():
+    """Factorizing new values through the session context must be
+    bit-identical to a fresh build_plan on the same pattern — plans AND
+    executed solves, across all four sched x comm modes, on 8 devices."""
+    print(run_py("""
+        import numpy as np, jax
+        from repro import compat
+        from repro.api import SpTRSVContext, PlanOptions
+        from repro.core import DistributedSolver, SolverConfig, build_plan
+        from repro.sparse import suite
+        from repro.sparse.matrix import CSR
+
+        a = suite.random_levelled(600, 24, 4.0, seed=5)
+        a2 = CSR(n=a.n, row_ptr=a.row_ptr, col_idx=a.col_idx,
+                 val=a.val * (1.0 + 0.25 * np.sin(np.arange(a.nnz))))
+        b = np.random.default_rng(1).uniform(-1, 1, a.n)
+        mesh = compat.make_mesh((8,), ("x",))
+        for comm in ("zerocopy", "unified"):
+            for sched in ("levelset", "syncfree"):
+                cfg = SolverConfig(block_size=16, comm=comm, sched=sched)
+                ctx = SpTRSVContext(mesh=mesh, options=cfg)
+                h = ctx.analyse(a)
+                ctx.solve(h, b)  # compile on a's values
+                ctx.factorize(a2, h)
+                fresh = build_plan(a2, 8, cfg)
+                refreshed = ctx.plan(h)
+                assert np.array_equal(refreshed.diag, fresh.diag), (comm, sched)
+                assert np.array_equal(refreshed.tiles, fresh.tiles), (comm, sched)
+                x_ctx = ctx.solve(h, b)
+                x_fresh = DistributedSolver(fresh, mesh).solve(b)
+                assert np.array_equal(x_ctx, x_fresh), (comm, sched)
+                assert ctx.stats()["analyses"] == 1, (comm, sched)
+        print("OK")
+    """))
+
+
+@pytest.mark.slow
 def test_lm_train_step_on_4_device_mesh():
     print(run_py("""
         import jax, numpy as np
