@@ -60,7 +60,11 @@ def main() -> None:
         b_blocks = None
         for sched, comm in modes:
             times = {}
-            for kb in fixed_backends:
+            # syncfree defines fused_streamed == fused (tune() dedups the
+            # same pair) — don't pay a duplicate compile + timing for it
+            cell_backends = [kb for kb in fixed_backends
+                             if not (sched == "syncfree" and kb == "fused_streamed")]
+            for kb in cell_backends:
                 opts = PlanOptions(block_size=16, sched=sched, comm=comm,
                                    kernel=kb)
                 h = ctx.analyse(a, opts)
@@ -97,7 +101,7 @@ def main() -> None:
                 # rows the fused-ratio gate watches — emit them here (same
                 # solve_blocks measurement unit as bench_tasks) so the gate
                 # has data in every CI run
-                switch_kb = next(k for k in times if k != "fused")
+                switch_kb = next(k for k in times if k not in ops.FUSED_BACKENDS)
                 emit(f"kernel/{entry.name}/switch", times[switch_kb],
                      f"kernel={switch_kb};fused_mode={mode_tag}")
                 emit(f"kernel/{entry.name}/fused", times["fused"],

@@ -52,14 +52,15 @@ def main() -> None:
                 emit(f"fig10/{entry.name}/{D}dev{suffix}", us,
                      f"speedup_vs_1dev={base_us/us:.2f}")
             if entry.name in FUSED_FOCUS:
-                cfg = SolverConfig(block_size=16, comm="zerocopy",
-                                   partition="taskpool",
-                                   tasks_per_device=max(1, total_tasks // D),
-                                   kernel_backend="fused")
-                solver = DistributedSolver(build_plan(a, D, cfg), mesh)
-                us = time_call(solver.solve_blocks, b)
-                emit(f"fig10/{entry.name}/{D}dev/fused", us,
-                     f"speedup_vs_1dev={base_us/us:.2f}")
+                for kb in ("fused", "fused_streamed"):
+                    cfg = SolverConfig(block_size=16, comm="zerocopy",
+                                       partition="taskpool",
+                                       tasks_per_device=max(1, total_tasks // D),
+                                       kernel_backend=kb)
+                    solver = DistributedSolver(build_plan(a, D, cfg), mesh)
+                    us = time_call(solver.solve_blocks, b)
+                    emit(f"fig10/{entry.name}/{D}dev/{kb}", us,
+                         f"speedup_vs_1dev={base_us/us:.2f}")
 
 
 if __name__ == "__main__":

@@ -51,23 +51,26 @@ def main() -> None:
                 emit(f"fig9/{entry.name}/tasks{t}{suffix}", results[t],
                      f"norm_vs_4task={results[4] / results[t]:.2f}")
 
-        # fused megakernel vs lax.switch executor on the same plan. On CPU the
-        # fused column runs in Pallas INTERPRET mode (flagged in the derived
-        # field) — there the portable signal is the dispatch-count ratio, not
-        # the wall time; only a TPU run times the compiled megakernel.
+        # fused megakernel (resident + streaming tile store) vs lax.switch
+        # executor on the same plan. On CPU the fused columns run in Pallas
+        # INTERPRET mode (flagged in the derived field) — there the portable
+        # signal is the dispatch-count / DMA-byte ratio, not the wall time;
+        # only a TPU run times the compiled megakernels.
         if entry.name in KERNEL_FOCUS:
             from repro.kernels import ops
 
             times = {}
-            stats = None
-            for kb in ("reference", "fused"):
+            per_kb_stats = {}
+            for kb in ("reference", "fused", "fused_streamed"):
                 cfg = SolverConfig(block_size=16, comm="zerocopy",
                                    partition="taskpool", tasks_per_device=8,
                                    kernel_backend=kb)
                 plan = build_plan(a, D, cfg)
-                stats = dispatch_stats(plan)
+                per_kb_stats[kb] = dispatch_stats(plan)
                 solver = DistributedSolver(plan, mesh)
                 times[kb] = time_call(solver.solve_blocks, b)
+            stats = per_kb_stats["fused"]
+            st_stats = per_kb_stats["fused_streamed"]
             mode = "interpret" if ops.interpret_mode() else "compiled"
             derived = (f"fused_launches={stats['fused_launches']};"
                        f"switch_dispatches={stats['switch_dispatches']};"
@@ -75,6 +78,13 @@ def main() -> None:
                        f"fused_mode={mode}")
             emit(f"kernel/{entry.name}/switch", times["reference"], derived)
             emit(f"kernel/{entry.name}/fused", times["fused"], derived)
+            emit(f"kernel/{entry.name}/fused_streamed", times["fused_streamed"],
+                 f"fused_launches={st_stats['fused_launches']};"
+                 f"vmem_bytes={st_stats['fused_vmem_bytes']};"
+                 f"resident_vmem_bytes={stats['fused_vmem_bytes']};"
+                 f"dma_bytes={st_stats['stream_dma_bytes']};"
+                 f"speedup_vs_resident={times['fused'] / times['fused_streamed']:.2f};"
+                 f"fused_mode={mode}")
 
 
 if __name__ == "__main__":

@@ -31,7 +31,9 @@ from repro.core.solver import (
     DistributedSolver,
     Plan,
     dispatch_stats,
+    fused_streaming,
     level_widths,
+    stream_dma_bytes_per_solve,
 )
 from repro.kernels import ops
 
@@ -50,8 +52,9 @@ COMM_CANDIDATES = ("zerocopy", "unified")
 
 
 def kernel_candidates() -> tuple:
-    """Platform default executor plus the fused megakernel path."""
-    return (ops.executor_backend(None), "fused")
+    """Platform default executor plus the fused megakernel paths (resident
+    store and streaming HBM tile store)."""
+    return (ops.executor_backend(None), "fused", "fused_streamed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,15 +90,16 @@ def estimate_plan_cost(plan: Plan, R: int = 1) -> float:
     solve_cost = w_solve * R
     tile_cost = w_tile_mem + w_tile_flop * R
     backend = ops.executor_backend(cfg.kernel_backend)
+    fused = backend in ops.FUSED_BACKENDS
     wid = level_widths(plan) if plan.n_levels else np.zeros((0, 3), np.int64)
     if cfg.sched == "levelset":
         compute = float(wid[:, 0].sum()) * solve_cost + float(wid[:, 1].sum()) * tile_cost
         ds = dispatch_stats(plan)
-        launches = (ds["fused_launches"] if backend == "fused"
+        launches = (ds["fused_launches"] if fused
                     else ds["switch_dispatches"]) + ds["exchanges"]
     else:
         sweeps = plan.n_supersteps
-        if backend == "fused":
+        if fused:
             # frontier-bucketed: per-sweep work is the ladder-rounded frontier,
             # approximated by the per-level schedule widths
             compute = (float(wid[:, 0].sum()) * solve_cost
@@ -107,8 +111,15 @@ def estimate_plan_cost(plan: Plan, R: int = 1) -> float:
             compute = sweeps * (MLR * solve_cost + MLT * tile_cost)
         launches = 2 * sweeps  # one solve + one update dispatch per sweep
     comm = plan.comm_bytes_per_solve * FLOPS_PER_BYTE / (B * B)
-    cost = compute + comm + DISPATCH_OVERHEAD * launches
-    if (backend == "fused" and cfg.sched == "levelset" and ops.interpret_mode()):
+    # streaming buys bounded VMEM residency with per-level HBM DMA bursts;
+    # score those bytes at the machine balance like the collective payload
+    # (fused_streaming also covers plain "fused" auto-upgraded past the
+    # VMEM limit, so the model prices what would actually execute)
+    dma = 0.0
+    if fused and fused_streaming(plan, R):
+        dma = stream_dma_bytes_per_solve(plan) * FLOPS_PER_BYTE / (B * B)
+    cost = compute + comm + dma + DISPATCH_OVERHEAD * launches
+    if fused and cfg.sched == "levelset" and ops.interpret_mode():
         cost *= INTERPRET_PENALTY
     return cost
 
@@ -153,9 +164,19 @@ def tune(a, options, mesh, *, part=None, bs=None):
     plans, scores = {}, {}
     for combo in combos:
         sched, comm, kernel = combo
+        if kernel == "fused_streamed" and (sched, comm, "fused") in plans:
+            # drop combos that resolve to a byte-identical executor as an
+            # already-enumerated candidate — same principle as the comm
+            # collapse above, never compile/probe the same program twice:
+            # syncfree defines fused_streamed == fused, and a levelset plan
+            # past the VMEM limit auto-streams plain "fused" anyway
+            if sched == "syncfree" or fused_streaming(
+                    plans[(sched, comm, "fused")], options.rhs_hint):
+                continue
         cfg = options.to_config(sched=sched, comm=comm, kernel=kernel)
         plans[combo] = build_plan(a, D, cfg, part=part)
         scores[combo] = estimate_plan_cost(plans[combo], R=options.rhs_hint)
+    combos = [c for c in combos if c in plans]
 
     probe_us: dict = {}
     solvers: dict = {}

@@ -10,7 +10,12 @@ from repro.core.solver import (
     build_plan,
     dispatch_stats,
     fused_segments,
+    fused_streaming,
+    fused_vmem_bytes,
     refresh_plan,
     solve_local,
     sptrsv,
+    stream_dma_bytes_per_solve,
+    stream_vmem_limit,
+    streamed_stores,
 )

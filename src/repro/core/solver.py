@@ -38,6 +38,7 @@ burns on skewed level-size distributions.
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import jax
 import jax.numpy as jnp
@@ -77,7 +78,9 @@ class SolverConfig:
     tasks_per_device: int = 8
     # None -> env/platform default; "reference"/"pallas" pick the per-op kernels
     # for the lax.switch executor; "fused" runs the superstep megakernel
-    # (levelset) / frontier-bucketed executor (syncfree).
+    # (levelset) / frontier-bucketed executor (syncfree); "fused_streamed"
+    # additionally streams the diag/tile stores from HBM per level (plain
+    # "fused" auto-upgrades to streaming above stream_vmem_limit()).
     kernel_backend: str | None = None
     gemv_group: int = 0
     rhs_hint: int = 1  # expected RHS panel width R, feeds the partition cost model
@@ -188,8 +191,11 @@ def _bucketize_levels(
     """
     T = ws.shape[0]
     if T == 0:
+        # empty schedule: an all-zero bucket keeps every executor branch a
+        # no-op — a nonzero width would make the (never-executed) branch
+        # index the 0-row offset table at trace time
         z = np.zeros(0, dtype=np.int64)
-        return ((1, 0, 0),), np.zeros(0, np.int32), z, z, z
+        return ((0, 0, 0),), np.zeros(0, np.int32), z, z, z
     for base in (2, 4, 16, 0):
         if base:
             bws, bwu, bwe = (_round_up_to(w, base) for w in (ws, wu, we))
@@ -449,6 +455,105 @@ def fused_segments(plan: Plan) -> np.ndarray:
     return np.stack([starts, his], axis=1)
 
 
+# ---------------------------------------------------------------------------
+# streaming HBM tile store (kernel_backend="fused_streamed", or auto-upgrade)
+# ---------------------------------------------------------------------------
+
+DEFAULT_STREAM_VMEM_LIMIT = 8 * 2**20  # bytes; ~half a TPU core's VMEM
+
+
+def stream_vmem_limit() -> int:
+    """Resident-store VMEM budget (bytes) above which ``kernel_backend="fused"``
+    auto-upgrades to the streaming tile store. Override with env
+    ``REPRO_STREAM_VMEM_LIMIT`` (an int; lower it to force streaming)."""
+    return int(os.environ.get("REPRO_STREAM_VMEM_LIMIT",
+                              DEFAULT_STREAM_VMEM_LIMIT))
+
+
+def stream_widths(plan: Plan) -> tuple[tuple, tuple]:
+    """Static DMA ladders: the distinct per-level (solve, update) bucket
+    widths. The streamed kernel unrolls one predicated async-copy per ladder
+    entry, so DMA start/wait always agree on the transfer size and the bytes
+    moved equal the compacted schedule footprint (no pad-to-max bursts)."""
+    if plan.n_levels == 0:
+        return (0,), (0,)
+    wid = level_widths(plan)
+    return (tuple(sorted({int(w) for w in wid[:, 0]})),
+            tuple(sorted({int(w) for w in wid[:, 1]})))
+
+
+def streamed_stores(plan: Plan) -> tuple[np.ndarray, np.ndarray]:
+    """Schedule-ordered ``(diag_sched, tiles_sched)`` stores for streaming.
+
+    ``diag_sched[d, k]`` is the diagonal tile of ``solve_rows[d, k]`` and
+    ``tiles_sched[d, k]`` the tile of slot ``upd_tiles[d, k]`` — i.e. the
+    stores permuted into compacted-schedule order, so level ``t``'s slice is
+    the contiguous run ``[lvl_off[t], lvl_off[t] + width)`` and the kernel's
+    per-level DMA is a single contiguous burst. Pad slots materialize the
+    identity diagonal / zero tile, keeping the streamed arithmetic
+    bit-identical to the resident kernel's pad handling.
+    """
+    nb = plan.bs.nb
+    safe = np.where(plan.solve_rows < 0, nb, plan.solve_rows)  # (D, S)
+    diag_sched = np.ascontiguousarray(plan.diag[safe])
+    tiles_sched = np.ascontiguousarray(
+        np.stack([plan.tiles[d][plan.upd_tiles[d]]
+                  for d in range(plan.n_devices)]))
+    return diag_sched, tiles_sched
+
+
+def fused_vmem_bytes(plan: Plan, R: int = 1, *, streamed: bool = False) -> int:
+    """Estimated peak VMEM footprint (bytes) of one fused superstep launch.
+
+    Resident: the whole ``diag`` + per-device ``tiles`` stores ride in VMEM,
+    so the footprint grows with the total tile count. Streamed: the stores
+    stay in HBM and only two double-buffers sized by the *widest level slice*
+    are resident. Carries (in + out windows) and the rhs are counted in both.
+    """
+    B = plan.bs.B
+    itemsize = 4
+    vec = (plan.bs.nb + 1) * B * max(1, R) * itemsize
+    n_carry = 3 if (plan.config.comm == "unified" and plan.n_devices > 1) else 2
+    vecs = (2 * n_carry + 1) * vec  # carry in + carry out windows + b_pad
+    if streamed:
+        if plan.n_levels:
+            wid = level_widths(plan)
+            ws, wu = int(wid[:, 0].max()), int(wid[:, 1].max())
+        else:
+            ws = wu = 0
+        store = 2 * (max(1, ws) + max(1, wu)) * B * B * itemsize
+    else:
+        store = (plan.diag.shape[0] + plan.tiles.shape[1]) * B * B * itemsize
+    return store + vecs
+
+
+def stream_dma_bytes_per_solve(plan: Plan) -> int:
+    """HBM→VMEM bytes the streamed megakernel moves per solve (one device):
+    every level's diag + tile slice exactly once, at its bucket width."""
+    if plan.n_levels == 0:
+        return 0
+    wid = level_widths(plan)
+    return int(wid[:, 0].sum() + wid[:, 1].sum()) * plan.bs.B * plan.bs.B * 4
+
+
+def fused_streaming(plan: Plan, R: int | None = None) -> bool:
+    """Whether ``plan``'s fused levelset executor uses the streaming store:
+    explicitly (``kernel_backend="fused_streamed"``) or automatically, when
+    the resident store's estimated footprint exceeds
+    :func:`stream_vmem_limit` — so ``"auto"`` sessions and large plans pick
+    streaming without user action. Syncfree plans never stream (the frontier
+    executor has no resident tile store problem)."""
+    if plan.config.sched != "levelset":
+        return False
+    backend = ops.executor_backend(plan.config.kernel_backend)
+    if backend == "fused_streamed":
+        return True
+    if backend != "fused":
+        return False
+    R = plan.config.rhs_hint if R is None else R
+    return fused_vmem_bytes(plan, R, streamed=False) > stream_vmem_limit()
+
+
 def dispatch_stats(plan: Plan) -> dict:
     """Predicted per-solve dispatch counts for the two levelset executors.
 
@@ -456,6 +561,10 @@ def dispatch_stats(plan: Plan) -> dict:
     the boundary psum); the fused path is one megakernel launch per exchange
     segment. This is the launch-count model behind the fused-vs-switch bench
     columns — measured times ride next to it, the counts are exact.
+    ``streamed``/``fused_vmem_bytes``/``stream_dma_bytes`` report the fused
+    executor's memory plan: whether the tile store streams from HBM, the
+    estimated VMEM footprint of the selected variant, and the per-solve DMA
+    traffic the streaming pays for that residency.
     """
     wid = level_widths(plan)
     cfg = plan.config
@@ -466,8 +575,12 @@ def dispatch_stats(plan: Plan) -> dict:
             else (plan.n_levels if unified else 0))
     switch = int(2 * (wid[:, 0] > 0).sum() + 2 * (wid[:, 1] > 0).sum()) + n_ex
     n_seg = int(len(fused_segments(plan)))
+    streamed = fused_streaming(plan)
     return {"switch_dispatches": switch, "fused_launches": n_seg,
-            "exchanges": n_ex}
+            "exchanges": n_ex, "streamed": streamed,
+            "fused_vmem_bytes": fused_vmem_bytes(
+                plan, plan.config.rhs_hint, streamed=streamed),
+            "stream_dma_bytes": stream_dma_bytes_per_solve(plan) if streamed else 0}
 
 
 def _fused_device_args(plan: Plan, d: int = 0):
@@ -487,6 +600,11 @@ def _fused_levelset_device_fn(plan: Plan):
     per-level exchange (packed psum at the level's bucket width, or the
     unified dense delta psum) runs *between* launches, and everything between
     two exchanges fuses into a single scalar-prefetched superstep kernel.
+
+    When :func:`fused_streaming` selects the streaming store, the
+    ``diag``/``tiles`` arguments are the *schedule-ordered* per-device stores
+    from :func:`streamed_stores` (both sharded) and every launch double-buffers
+    its levels' slices from HBM instead of holding the stores in VMEM.
     """
     cfg = plan.config
     nb, T, D = plan.bs.nb, plan.n_levels, plan.n_devices
@@ -498,6 +616,8 @@ def _fused_levelset_device_fn(plan: Plan):
     grid = max(1, int(seg_len.max(initial=0)))
     wid = level_widths(plan)
     interp = ops.interpret_mode()
+    streamed = fused_streaming(plan)
+    sw, uw = stream_widths(plan) if streamed else ((), ())
     seg_tab = (np.stack([segs[:, 0], seg_len], axis=1).astype(np.int32)
                if len(segs) else np.zeros((1, 2), np.int32))
     if has_ex and len(segs):
@@ -510,6 +630,8 @@ def _fused_levelset_device_fn(plan: Plan):
     def fn(sr, ut, trow, tcol, tiles, owner_mask, diag, ex, b_pad):
         sr, ut = sr[0], ut[0]
         trow, tcol, tiles, owner_mask = trow[0], tcol[0], tiles[0], owner_mask[0]
+        if streamed:
+            diag = diag[0]  # schedule-ordered stores are per-device (sharded)
         off_a = jnp.asarray(plan.lvl_off)
         wid_a = jnp.asarray(wid)
         seg_a = jnp.asarray(seg_tab)
@@ -538,7 +660,8 @@ def _fused_levelset_device_fn(plan: Plan):
                 return superstep_call(
                     seg_a[s], off_a, wid_a, sr, ut, trow, tcol, diag, tiles,
                     b_pad, acc, x, delta, grid=grid, split_delta=True,
-                    interpret=interp,
+                    interpret=interp, stream=streamed,
+                    solve_widths=sw, upd_widths=uw,
                 )
             acc, x = carry
             if has_ex:
@@ -548,7 +671,8 @@ def _fused_levelset_device_fn(plan: Plan):
                     acc = jax.lax.switch(ex_sel_a[s], ex_branches, s, acc)
             return superstep_call(
                 seg_a[s], off_a, wid_a, sr, ut, trow, tcol, diag, tiles,
-                b_pad, acc, x, grid=grid, interpret=interp,
+                b_pad, acc, x, grid=grid, interpret=interp, stream=streamed,
+                solve_widths=sw, upd_widths=uw,
             )
 
         init = (z, z, z) if unified else (z, z)
@@ -573,14 +697,21 @@ def solve_local(plan: Plan, b_blocks: jax.Array) -> jax.Array:
     b_pad = jnp.concatenate(
         [b_blocks, jnp.zeros((1,) + b_blocks.shape[1:], b_blocks.dtype)]
     )
-    if ops.executor_backend(plan.config.kernel_backend) == "fused":
+    if ops.is_fused(plan.config.kernel_backend):
         # the whole solve is one megakernel launch (no exchanges on 1 device)
         off, wid, sr, ut, trow, tcol, diag, tiles = _fused_device_args(plan, 0)
+        streamed = fused_streaming(plan)
+        sw, uw = ((), ())
+        if streamed:
+            diag_s, tiles_s = streamed_stores(plan)
+            diag, tiles = jnp.asarray(diag_s[0]), jnp.asarray(tiles_s[0])
+            sw, uw = stream_widths(plan)
         acc0 = jnp.zeros_like(b_pad)
         seg = jnp.array([0, plan.n_levels], jnp.int32)
         _, x = superstep_call(
             seg, off, wid, sr, ut, trow, tcol, diag, tiles, b_pad, acc0, acc0,
             grid=max(1, plan.n_levels), interpret=ops.interpret_mode(),
+            stream=streamed, solve_widths=sw, upd_widths=uw,
         )
         return x[:nb]
     diag = jnp.asarray(plan.diag)
@@ -870,8 +1001,9 @@ class DistributedSolver:
         sharded = P(AXIS)
         repl = P()
         backend = ops.executor_backend(plan.config.kernel_backend)
+        self._streamed = fused_streaming(plan)
         if plan.config.sched == "levelset":
-            if backend == "fused":
+            if backend in ops.FUSED_BACKENDS:
                 fn = _fused_levelset_device_fn(plan)
             else:
                 fn = (
@@ -879,9 +1011,12 @@ class DistributedSolver:
                     if plan.config.comm == "zerocopy" or D == 1
                     else _levelset_unified_device_fn(plan)
                 )
-            in_specs = (sharded,) * 6 + (repl, repl, repl)
+            # streaming swaps the replicated diag for the per-device
+            # schedule-ordered store, which is sharded like the tiles
+            diag_spec = sharded if self._streamed else repl
+            in_specs = (sharded,) * 6 + (diag_spec, repl, repl)
         else:
-            fn = _syncfree_device_fn(plan, frontier=backend == "fused")
+            fn = _syncfree_device_fn(plan, frontier=backend in ops.FUSED_BACKENDS)
             in_specs = (sharded,) * 5 + (repl, repl, repl, repl)
         self._args = self._plan_args(plan)
         mapped = compat.shard_map(
@@ -891,8 +1026,13 @@ class DistributedSolver:
 
     def _plan_args(self, plan: Plan) -> tuple:
         if plan.config.sched == "levelset":
+            diag, tiles = plan.diag, plan.tiles
+            if self._streamed:
+                # schedule-ordered HBM stores; recomputed here on every
+                # refresh so re-armed values reach the streamed kernel too
+                diag, tiles = streamed_stores(plan)
             return (plan.solve_rows, plan.upd_tiles, plan.tile_row,
-                    plan.tile_col, plan.tiles, self._owner_mask, plan.diag,
+                    plan.tile_col, tiles, self._owner_mask, diag,
                     plan.ex_rows)
         return (plan.local_rows, plan.tile_row, plan.tile_col,
                 plan.tiles, self._owner_mask, plan.diag, plan.indeg,

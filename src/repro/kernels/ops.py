@@ -9,6 +9,13 @@ Backends:
   whole compacted schedule in one Pallas superstep megakernel
   (:mod:`repro.kernels.superstep`) and syncfree runs frontier-bucketed.
   Individual block ops called under it fall back to the platform default.
+* ``fused_streamed`` — the megakernel with the streaming HBM tile store:
+  ``diag``/``tiles`` live in ``ANY``/HBM and each level's schedule slice is
+  double-buffered into VMEM by async DMA, so VMEM residency scales with the
+  widest level slice instead of the total tile count. Plain ``fused`` also
+  auto-upgrades to streaming when the resident store would exceed
+  ``core.solver.stream_vmem_limit()``. For ``sched="syncfree"`` it behaves
+  exactly like ``fused`` (the frontier executor has no resident tile problem).
 
 Every op accepts either a single right-hand side per tile (``(k, B)``) or a
 multi-RHS panel (``(k, B, R)``) — the panel path serves R systems from one
@@ -26,7 +33,11 @@ from repro.kernels import ref
 from repro.kernels.block_spmv import block_gemm, block_gemv, block_gemv_grouped
 from repro.kernels.block_trsv import block_trsm, block_trsv
 
-BACKENDS = ("reference", "pallas", "fused")
+BACKENDS = ("reference", "pallas", "fused", "fused_streamed")
+
+# executor-level backends that select the megakernel levelset path (and the
+# frontier-bucketed syncfree executor)
+FUSED_BACKENDS = ("fused", "fused_streamed")
 
 
 def _default_backend() -> str:
@@ -45,11 +56,16 @@ def executor_backend(backend: str | None = None) -> str:
     return b
 
 
+def is_fused(backend: str | None = None) -> bool:
+    """Whether the resolved executor backend is a fused (megakernel) variant."""
+    return executor_backend(backend) in FUSED_BACKENDS
+
+
 def op_backend(backend: str | None = None) -> str:
-    """Resolve the per-op backend; ``fused`` degrades to the platform default
-    (pallas on TPU, reference elsewhere) for the residual batched ops."""
+    """Resolve the per-op backend; the fused variants degrade to the platform
+    default (pallas on TPU, reference elsewhere) for the residual batched ops."""
     b = executor_backend(backend)
-    if b == "fused":
+    if b in FUSED_BACKENDS:
         b = "pallas" if jax.default_backend() == "tpu" else "reference"
     return b
 

@@ -45,10 +45,24 @@ splits the level range into *segments* (``core.solver.fused_segments``): one
 launch per run of levels between exchanges. Single-device plans and empty
 cuts fuse the entire solve into exactly one launch.
 
-All operands ride in whole (full-array block specs): the plans this repo
-builds keep ``diag``/``tiles`` well under VMEM at the benched scales; a
-streaming variant would move the tile store to ``ANY`` and double-buffer DMA
-slices per level.
+Resident vs streamed stores
+---------------------------
+In the **resident** variant all operands ride in whole (full-array block
+specs): fine while ``diag``/``tiles`` fit VMEM, but the footprint grows with
+the *total* tile count, which caps the matrix sizes the fused hot path can
+serve. The **streamed** variant (``stream=True``) is the production-scale
+path: ``diag``/``tiles`` arrive *schedule-ordered* (level ``t``'s slice is
+contiguous at ``off[t]`` — exactly the compacted flat layout) and live in
+``ANY``/HBM; each grid program double-buffers its level's slices into two
+VMEM scratch buffers with async DMA, prefetching level ``t+1`` while level
+``t`` computes. VMEM residency then scales with the *widest level slice*
+(``max(w_solve)``/``max(w_upd)`` over the bucketized level table), not the
+total tile store, and the DMA engine sees exactly one contiguous burst per
+level per store. The DMA sizes branch over the distinct bucket widths (a
+static ladder of ≤ ``MAX_BUCKETS`` sizes), so the bytes moved per solve equal
+the compacted schedule footprint — no pad-to-max traffic. The in-kernel
+arithmetic is shared with the resident variant op-for-op, so streamed,
+resident, and ``lax.switch`` execution are mutually bit-identical.
 """
 from __future__ import annotations
 
@@ -60,6 +74,12 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 N_PREFETCH = 7  # seg, off, wid, sr, ut, trow, tcol
+
+# Trace-time record of the most recent streamed launch's VMEM scratch shapes
+# (diag_buf/tile_buf) — lets tests assert the streaming contract (buffers
+# sized by the max per-level slice, never the total store) without digging
+# into lowered HLO.
+LAST_STREAM_ALLOC: dict = {}
 
 
 def _solve_tile(L, rhs):
@@ -106,7 +126,19 @@ def _solve_tile_panel(L, rhs):
 def _superstep_kernel(
     seg_ref, off_ref, wid_ref, sr_ref, ut_ref, trow_ref, tcol_ref,
     diag_ref, tiles_ref, b_ref, *io_refs, multi: bool, split_delta: bool,
+    stream: bool = False, solve_widths: tuple = (), upd_widths: tuple = (),
 ):
+    """Shared kernel body for the resident and streamed variants.
+
+    Resident: ``diag_ref``/``tiles_ref`` are whole VMEM arrays indexed by row
+    / tile slot. Streamed: they are *schedule-ordered* HBM (``ANY``) stores —
+    slot ``k`` of the solve/update flats corresponds to entry ``k`` — and each
+    level's contiguous slice is DMA'd into the double-buffered VMEM scratch
+    (``dbuf``/``tbuf``) at its exact bucket width (one ``pl.when`` branch per
+    distinct width in the static ladder, so start/wait always agree on size).
+    """
+    if stream:
+        *io_refs, dbuf, tbuf, dsem, tsem = io_refs
     if split_delta:
         acc_in, delta_in, x_in, acc_ref, delta_ref, x_ref = io_refs
     else:
@@ -122,9 +154,42 @@ def _superstep_kernel(
             delta_ref[...] = delta_in[...]
 
     t = seg_ref[0] + p
+    slot = jax.lax.rem(p, 2)
+
+    if stream:
+
+        def _level_copies(q, s):
+            """(predicate, async_copy) pairs moving level ``seg[0]+q``'s
+            schedule slices into scratch slot ``s`` — one candidate per
+            distinct bucket width, predicated on the level's actual width."""
+            tq = seg_ref[0] + q
+            for w in solve_widths:
+                if w > 0:
+                    yield wid_ref[tq, 0] == w, pltpu.make_async_copy(
+                        diag_ref.at[pl.ds(off_ref[tq, 0], w)],
+                        dbuf.at[s, pl.ds(0, w)], dsem.at[s])
+            for w in upd_widths:
+                if w > 0:
+                    yield wid_ref[tq, 1] == w, pltpu.make_async_copy(
+                        tiles_ref.at[pl.ds(off_ref[tq, 1], w)],
+                        tbuf.at[s, pl.ds(0, w)], tsem.at[s])
+
+        @pl.when(jnp.logical_and(p == 0, seg_ref[1] > 0))
+        def _():  # warm-up: this launch's first level has no predecessor
+            for pred, cp in _level_copies(0, 0):
+                pl.when(pred)(cp.start)
+
+        @pl.when(p + 1 < seg_ref[1])
+        def _():  # prefetch the next level into the other slot while computing
+            for pred, cp in _level_copies(p + 1, jax.lax.rem(p + 1, 2)):
+                pl.when(pred)(cp.start)
 
     @pl.when(p < seg_ref[1])
     def _():
+        if stream:  # this level's slices must have landed before compute
+            for pred, cp in _level_copies(p, slot):
+                pl.when(pred)(cp.wait)
+
         # --- solve this level's owned rows (dynamic trip = bucket width) ---
         o_s = off_ref[t, 0]
 
@@ -133,7 +198,7 @@ def _superstep_kernel(
 
             @pl.when(r >= 0)
             def _():
-                L = diag_ref[r]
+                L = dbuf[slot, i] if stream else diag_ref[r]
                 rhs = b_ref[r] - acc_ref[r]
                 x_ref[r] = _solve_tile_panel(L, rhs) if multi else _solve_tile(L, rhs)
 
@@ -151,7 +216,8 @@ def _superstep_kernel(
             # changes its reduction codegen by 1 ulp vs the batched per-op
             # kernels, breaking switch-executor bit-exactness
             tile, xv = jax.lax.optimization_barrier(
-                (tiles_ref[tid], x_ref[tcol_ref[tid]])
+                (tbuf[slot, j] if stream else tiles_ref[tid],
+                 x_ref[tcol_ref[tid]])
             )
             prod = jax.lax.optimization_barrier(
                 jnp.dot(tile, xv, preferred_element_type=tile.dtype)
@@ -164,7 +230,9 @@ def _superstep_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("grid", "split_delta", "interpret")
+    jax.jit,
+    static_argnames=("grid", "split_delta", "interpret", "stream",
+                     "solve_widths", "upd_widths"),
 )
 def superstep_call(
     seg: jax.Array,  # (2,) int32 [first_level, n_active_levels]
@@ -174,8 +242,8 @@ def superstep_call(
     ut: jax.Array,  # (U,) int32 flat tile slots, pad ML
     trow: jax.Array,  # (ML+1,) int32
     tcol: jax.Array,  # (ML+1,) int32
-    diag: jax.Array,  # (nb+1, B, B)
-    tiles: jax.Array,  # (ML+1, B, B)
+    diag: jax.Array,  # (nb+1, B, B) resident; (S, B, B) schedule-ordered streamed
+    tiles: jax.Array,  # (ML+1, B, B) resident; (U, B, B) schedule-ordered streamed
     b_pad: jax.Array,  # (nb+1, B) or (nb+1, B, R)
     acc: jax.Array,
     x: jax.Array,
@@ -184,15 +252,30 @@ def superstep_call(
     grid: int,
     split_delta: bool = False,
     interpret: bool = False,
+    stream: bool = False,
+    solve_widths: tuple = (),
+    upd_widths: tuple = (),
 ):
     """One fused launch executing ``grid`` levels starting at ``seg[0]``.
 
     Returns the updated ``(acc, x)`` carry, or ``(acc, delta, x)`` when
     ``split_delta`` (the unified executor's not-yet-exchanged contributions
     accumulate in ``delta`` while solves read ``acc``).
+
+    With ``stream=True`` the ``diag``/``tiles`` operands are the
+    *schedule-ordered* stores (``core.solver.streamed_stores``): they stay in
+    ``ANY``/HBM and each level's contiguous slice is double-buffered into
+    VMEM scratch sized by the max bucket width in ``solve_widths`` /
+    ``upd_widths`` (the static ladder of distinct per-level widths).
     """
     multi = b_pad.ndim == 3
     assert (delta is not None) == split_delta
+    if off.shape[0] == 0:
+        # empty schedule (0-level plan): every program is inert, but the
+        # kernel still traces reads of the level tables — give them one
+        # zero row so those (never-executed) reads stay in bounds
+        off = jnp.zeros((1, 3), jnp.int32)
+        wid = jnp.zeros((1, 3), jnp.int32)
     carry_in = (acc, delta, x) if split_delta else (acc, x)
     n_carry = len(carry_in)
 
@@ -200,11 +283,34 @@ def superstep_call(
         zeros = (0,) * a.ndim
         return pl.BlockSpec(a.shape, lambda p, *refs: zeros)
 
+    scratch_shapes = []
+    if stream:
+        B = diag.shape[-1]
+        WS = max([w for w in solve_widths if w > 0] or [1])
+        WU = max([w for w in upd_widths if w > 0] or [1])
+        # the streaming contract: VMEM scratch scales with the widest level
+        # slice (double-buffered), never with the total store size
+        scratch_shapes = [
+            pltpu.VMEM((2, WS, B, B), diag.dtype),
+            pltpu.VMEM((2, WU, B, B), tiles.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ]
+        LAST_STREAM_ALLOC.update(
+            diag_buf=(2, WS, B, B), tile_buf=(2, WU, B, B),
+            diag_store=tuple(diag.shape), tile_store=tuple(tiles.shape),
+        )
+        store_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+        in_specs = [store_spec, store_spec] + [vec_spec(a) for a in (b_pad, *carry_in)]
+    else:
+        in_specs = [vec_spec(a) for a in (diag, tiles, b_pad, *carry_in)]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=N_PREFETCH,
         grid=(grid,),
-        in_specs=[vec_spec(a) for a in (diag, tiles, b_pad, *carry_in)],
+        in_specs=in_specs,
         out_specs=[vec_spec(a) for a in carry_in],
+        scratch_shapes=scratch_shapes,
     )
     # The carries are deliberately NOT donated via input_output_aliases:
     # callers init them from one zeroed array that XLA may CSE into a single
@@ -212,7 +318,8 @@ def superstep_call(
     # x_ref writes clobber acc_ref on hardware. Program 0's explicit copy-in
     # already pays the one copy per launch that donation would have saved.
     kernel = functools.partial(
-        _superstep_kernel, multi=multi, split_delta=split_delta
+        _superstep_kernel, multi=multi, split_delta=split_delta,
+        stream=stream, solve_widths=solve_widths, upd_widths=upd_widths,
     )
     out = pl.pallas_call(
         kernel,

@@ -43,6 +43,9 @@ def main() -> None:
                     choices=["default", "auto"] + list(ops.BACKENDS),
                     help="executor backend: 'fused' = superstep megakernel "
                          "(levelset) / frontier-bucketed (syncfree); "
+                         "'fused_streamed' = megakernel with the streaming "
+                         "HBM tile store (plain 'fused' auto-streams above "
+                         "REPRO_STREAM_VMEM_LIMIT); "
                          "'reference'/'pallas' = lax.switch executor; "
                          "'auto' = cost-model / probe selection")
     ap.add_argument("--probe", type=int, default=0,
@@ -88,10 +91,14 @@ def main() -> None:
               f"({handle.auto.mode}, probe-overhead "
               f"{handle.auto.probe_overhead_us/1e3:.1f}ms)")
     if cfg.sched == "levelset":
+        stream_note = (f" dma/solve={ds['stream_dma_bytes']/1e3:.0f}KB"
+                       if ds["streamed"] else "")
         print(f"[solve] kernel={backend} "
               f"fused-launches={ds['fused_launches']} "
               f"switch-dispatches={ds['switch_dispatches']} "
-              f"exchanges={ds['exchanges']}")
+              f"exchanges={ds['exchanges']} "
+              f"streamed={ds['streamed']} "
+              f"vmem={ds['fused_vmem_bytes']/1e6:.2f}MB{stream_note}")
     else:
         print(f"[solve] kernel={backend} "
               f"frontier-caps={plan.frontier_caps}")

@@ -7,3 +7,6 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# shared generators (tests/strategies.py) import as `strategies` everywhere,
+# independent of pytest's import mode
+sys.path.insert(0, os.path.dirname(__file__))

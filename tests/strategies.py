@@ -1,0 +1,199 @@
+"""Shared triangular-suite generators for the whole test suite.
+
+One home for the matrix builders that used to be re-implemented across
+``test_solver`` / ``test_superstep`` / ``test_malleable`` / ``test_krylov``
+(and the partition property tests): the real-valued suite structures, the
+exact-arithmetic *dyadic* substitutions that make cross-executor bitwise
+comparison meaningful, the random block structures, and the SPD systems the
+Krylov layer consumes. Plain builders work without any optional dependency;
+the hypothesis strategies at the bottom mirror them for the property-test
+layer and are ``None`` when hypothesis is not installed (guard with
+``pytest.importorskip("hypothesis")`` before using them).
+
+Dyadic exactness contract
+-------------------------
+``dyadic`` keeps a matrix's sparsity but substitutes unit diagonals and
+±0.25/±0.5 off-diagonal values. With shallow dependency depth (≤ 8 levels in
+the canned ``EXACT_MATRICES``), every intermediate of a forward substitution
+is exactly representable in float32: any two *correct* executions — across
+kernels, executors, device counts — produce identical bits, so
+``assert_array_equal`` really is bit-exactness and any schedule/masking/
+exchange bug produces a loudly different answer. ``exactness_holds`` is the
+self-check of that premise.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import compat
+from repro.core.blocking import build_blocks
+from repro.sparse import suite
+from repro.sparse.matrix import CSR, lower_triangular_from_coo, reference_solve
+
+
+def mesh1():
+    """Single-device mesh (the main test process keeps 1 CPU device)."""
+    import jax
+
+    return compat.make_mesh((1,), ("x",), devices=jax.devices()[:1])
+
+
+# ---------------------------------------------------------------------------
+# exact-arithmetic (dyadic) suites — bit-exactness across executors
+# ---------------------------------------------------------------------------
+
+
+def dyadic(a: CSR, seed: int = 0) -> CSR:
+    """Same sparsity, exactly-representable values: unit diagonal, ±2^-k
+    off-diagonals. With shallow (≤8 level) structures every intermediate fits
+    float32 exactly, making cross-executor comparisons bit-meaningful."""
+    rows = np.repeat(np.arange(a.n), np.diff(a.row_ptr))
+    is_diag = a.col_idx == rows
+    rng = np.random.default_rng(seed)
+    signs = rng.choice(np.array([-0.5, -0.25, 0.25, 0.5], np.float32),
+                       size=a.val.shape)
+    val = np.where(is_diag, 1.0, signs).astype(np.float32)
+    return CSR(n=a.n, row_ptr=a.row_ptr, col_idx=a.col_idx, val=val)
+
+
+def dyadic_rhs(n: int, seed: int = 1, lo: int = -4, hi: int = 5) -> np.ndarray:
+    """Small-integer rhs — exactly representable, pairs with ``dyadic``."""
+    return np.random.default_rng(seed).integers(lo, hi, n).astype(np.float32)
+
+
+def exactness_holds(a: CSR, b: np.ndarray) -> bool:
+    """Self-check of the dyadic premise: the float32 solve equals the float64
+    oracle bit-for-bit, i.e. no rounding happened anywhere."""
+    x64 = reference_solve(a, b)
+    return np.array_equal(x64.astype(np.float32).astype(np.float64), x64)
+
+
+# suite-shaped structures: skewed level-size distribution and banded locality
+EXACT_MATRICES = {
+    "skewed": lambda: dyadic(suite.random_levelled(400, 8, 4.0, seed=6)),
+    "banded": lambda: dyadic(
+        suite.random_levelled(300, 8, 4.0, seed=7, locality=0.8)),
+}
+
+
+# ---------------------------------------------------------------------------
+# real-valued solver regimes (scipy-oracle comparisons at float tolerance)
+# ---------------------------------------------------------------------------
+
+SOLVER_MATRICES = {
+    "levelled": lambda: suite.random_levelled(400, 24, 4.0, seed=3),
+    "chain": lambda: suite.chain(150),
+    "grid": lambda: suite.grid2d_factor(18, seed=1),
+    "parallel": lambda: suite.block_diagonal_parallel(300, 12, 3.0, seed=2),
+    "two_level": lambda: suite.random_levelled(300, 2, 8.0, seed=4),
+}
+
+
+# ---------------------------------------------------------------------------
+# degenerate structures (hardening regressions)
+# ---------------------------------------------------------------------------
+
+
+def empty_matrix() -> CSR:
+    """n == 0: no rows, no levels, empty schedules."""
+    return CSR(n=0, row_ptr=np.zeros(1, np.int64),
+               col_idx=np.zeros(0, np.int32), val=np.zeros(0, np.float32))
+
+
+def diagonal_matrix(n: int = 24, scale: float = 2.0) -> CSR:
+    """Diagonal-only: one level, zero update tiles in every segment."""
+    return CSR(n=n, row_ptr=np.arange(n + 1, dtype=np.int64),
+               col_idx=np.arange(n, dtype=np.int32),
+               val=np.full(n, scale, np.float32))
+
+
+def single_entry_matrix(v: float = 3.0) -> CSR:
+    """n == 1: a single diagonal entry — one row, one block, one level."""
+    return CSR(n=1, row_ptr=np.array([0, 1], np.int64),
+               col_idx=np.zeros(1, np.int32), val=np.array([v], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# random block structures (partition-layer tests)
+# ---------------------------------------------------------------------------
+
+
+def random_triangular(n: int = 200, seed: int = 0, m: int = 600) -> CSR:
+    """Random lower-triangular CSR from m coo draws (full diagonal added)."""
+    rng = np.random.default_rng(seed)
+    return lower_triangular_from_coo(
+        n, rng.integers(0, n, m), rng.integers(0, n, m), rng=rng)
+
+
+def random_blocks(n: int = 200, B: int = 8, seed: int = 0, m: int = 600):
+    """Blocked structure of :func:`random_triangular` (partition-layer unit)."""
+    return build_blocks(random_triangular(n, seed, m), B)
+
+
+# ---------------------------------------------------------------------------
+# SPD systems (Krylov-layer tests)
+# ---------------------------------------------------------------------------
+
+
+def spd_problem(side: int = 18, seed: int = 0):
+    """grid2d_factor-derived SPD system (the paper's structured-grid regime):
+    returns ``(a_lower, b, full_scipy_csc)``."""
+    from repro.krylov import spd_lower_from_triangular, symmetric_full_csr
+    from repro.sparse.matrix import to_scipy
+
+    a = spd_lower_from_triangular(suite.grid2d_factor(side, seed=seed))
+    b = np.random.default_rng(seed).uniform(-1, 1, a.n)
+    full = to_scipy(symmetric_full_csr(a)).tocsc()
+    return a, b, full
+
+
+# ---------------------------------------------------------------------------
+# hypothesis strategies (optional dependency — mirror the builders above)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import strategies as st
+except ImportError:  # requirements-dev only; plain builders stay available
+    st = None
+
+if st is not None:
+
+    @st.composite
+    def triangular_problems(draw, max_n: int = 120, max_levels: int = 12):
+        """Real-valued (a, b) problems over the levelled-suite structure
+        space: varying size, depth, density and locality."""
+        n = draw(st.integers(16, max_n))
+        levels = draw(st.integers(1, min(max_levels, n)))
+        avg_deps = draw(st.floats(1.0, 5.0))
+        locality = draw(st.sampled_from([0.0, 0.8]))
+        seed = draw(st.integers(0, 2**16))
+        a = suite.random_levelled(n, levels, avg_deps, seed=seed,
+                                  locality=locality)
+        b = np.random.default_rng(seed ^ 0x5EED).uniform(-1, 1, a.n)
+        return a, b
+
+    @st.composite
+    def dyadic_problems(draw, max_n: int = 160, max_levels: int = 8):
+        """Exact-arithmetic (a, b) problems: dyadic values on shallow
+        levelled structures + small-integer rhs, so bitwise cross-executor
+        comparison is meaningful for every draw."""
+        n = draw(st.integers(16, max_n))
+        levels = draw(st.integers(1, min(max_levels, n)))
+        avg_deps = draw(st.floats(1.0, 4.0))
+        locality = draw(st.sampled_from([0.0, 0.8]))
+        seed = draw(st.integers(0, 2**16))
+        a = dyadic(suite.random_levelled(n, levels, avg_deps, seed=seed,
+                                         locality=locality), seed=seed)
+        b = dyadic_rhs(a.n, seed=seed ^ 0xD1AD)
+        return a, b
+
+    @st.composite
+    def block_structures(draw, max_n: int = 240):
+        """Random blocked structures for partition-layer properties."""
+        n = draw(st.integers(16, max_n))
+        B = draw(st.sampled_from([4, 8, 16]))
+        m = draw(st.integers(0, 4 * n))
+        seed = draw(st.integers(0, 1000))
+        return random_blocks(n=n, B=B, seed=seed, m=m)
+else:  # pragma: no cover - exercised only without requirements-dev
+    triangular_problems = dyadic_problems = block_structures = None

@@ -11,6 +11,7 @@ from repro.api import (
     as_options,
     pattern_key,
 )
+from repro import compat
 from repro.api.autotune import candidate_grid, estimate_plan_cost
 from repro.core import DistributedSolver, SolverConfig, build_plan, refresh_plan
 from repro.krylov import matvec_lower, solve_ic0_pcg, spd_lower_from_triangular
@@ -236,12 +237,37 @@ def test_refresh_plan_rejects_different_pattern():
 
 
 def test_candidate_grid_dimensions():
-    assert len(candidate_grid(PlanOptions.auto(probe_solves=0), 4)) == 2 * 2 * 2
-    assert len(candidate_grid(PlanOptions.auto(probe_solves=0), 1)) == 2 * 1 * 2
+    # kernel axis: platform default + fused + fused_streamed
+    assert len(candidate_grid(PlanOptions.auto(probe_solves=0), 4)) == 2 * 2 * 3
+    assert len(candidate_grid(PlanOptions.auto(probe_solves=0), 1)) == 2 * 1 * 3
     only_kernel = PlanOptions(kernel="auto")
-    assert len(candidate_grid(only_kernel, 4)) == 2
+    assert len(candidate_grid(only_kernel, 4)) == 3
     fixed = PlanOptions()
     assert candidate_grid(fixed, 4) == [("levelset", "zerocopy", "default")]
+
+
+def test_auto_dedups_byte_identical_candidates(monkeypatch):
+    """tune() never scores/probes the same compiled program twice: syncfree
+    fused_streamed == fused by definition, so only the fused combo survives
+    (and on plans past the VMEM limit the levelset pair collapses too)."""
+    from repro.api.autotune import tune
+
+    a = _matrix()
+    opts = PlanOptions(block_size=16, sched="syncfree", kernel="auto",
+                       probe_solves=0)
+    _, _, decision, _ = tune(a, opts, compat.make_mesh((1,), ("x",)))
+    kernels = {k for (_, _, k) in decision.scores}
+    assert "fused_streamed" not in kernels
+    assert "fused" in kernels
+    # levelset keeps both variants while the resident store fits VMEM...
+    opts_lv = PlanOptions(block_size=16, sched="levelset", kernel="auto",
+                          probe_solves=0)
+    _, _, dec_lv, _ = tune(a, opts_lv, compat.make_mesh((1,), ("x",)))
+    assert {"fused", "fused_streamed"} <= {k for (_, _, k) in dec_lv.scores}
+    # ...and collapses them once plain fused would auto-stream anyway
+    monkeypatch.setenv("REPRO_STREAM_VMEM_LIMIT", "1")
+    _, _, dec_small, _ = tune(a, opts_lv, compat.make_mesh((1,), ("x",)))
+    assert "fused_streamed" not in {k for (_, _, k) in dec_small.scores}
 
 
 def test_auto_modelled_selection_records_decision():

@@ -1,0 +1,100 @@
+"""Degenerate-input hardening: empty levels, zero-tile segments, single-row
+blocks — every executor backend must handle them without special-casing by
+the caller.
+
+Regressions pinned here:
+* n == 0 used to crash every executor at trace time — the T == 0 bucket was
+  ``(1, 0, 0)``, so the (never-executed) superstep branch indexed the 0-row
+  ``lvl_off`` table; the fused kernel additionally sliced the empty level
+  tables. Now the empty bucket is all-zero and ``superstep_call`` pads empty
+  tables to one inert row.
+"""
+import numpy as np
+import pytest
+
+import strategies
+from strategies import mesh1 as _mesh1
+from repro.core import DistributedSolver, SolverConfig, build_plan, dispatch_stats
+from repro.core.solver import fused_segments, level_widths
+from repro.sparse.matrix import reference_solve
+
+BACKENDS = ("reference", "pallas", "fused", "fused_streamed")
+
+
+@pytest.mark.parametrize("kernel", BACKENDS)
+@pytest.mark.parametrize("sched", ["levelset", "syncfree"])
+def test_empty_matrix_solves(kernel, sched):
+    """n == 0: no levels, no tiles — the solve returns an empty vector."""
+    a = strategies.empty_matrix()
+    plan = build_plan(a, 1, SolverConfig(block_size=8, sched=sched,
+                                         kernel_backend=kernel))
+    assert plan.n_levels == 0 and plan.bs.nb == 0
+    segs = fused_segments(plan)
+    assert segs.shape == (0, 2)
+    assert level_widths(plan).shape == (0, 3)
+    assert plan.comm_bytes_per_solve == 0
+    ds = dispatch_stats(plan)
+    assert ds["fused_launches"] == 0 and ds["switch_dispatches"] == 0
+    x = DistributedSolver(plan, _mesh1()).solve(np.zeros(0))
+    assert x.shape == (0,)
+
+
+@pytest.mark.parametrize("kernel", BACKENDS)
+@pytest.mark.parametrize("sched", ["levelset", "syncfree"])
+def test_zero_tile_segments(kernel, sched):
+    """Diagonal-only matrix: one level whose update schedule is empty — the
+    fused segment has zero tiles and the streamed variant must not DMA any."""
+    a = strategies.diagonal_matrix(n=24, scale=2.0)
+    b = np.arange(1.0, 25.0)
+    plan = build_plan(a, 1, SolverConfig(block_size=8, sched=sched,
+                                         kernel_backend=kernel))
+    if plan.n_levels:
+        assert (level_widths(plan)[:, 1] == 0).all()  # no update tiles anywhere
+    x = DistributedSolver(plan, _mesh1()).solve(b)
+    np.testing.assert_allclose(x, b / 2.0, rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("kernel", BACKENDS)
+def test_single_row_block(kernel):
+    """n < block_size: the whole matrix is one block row, one level, and the
+    fused path runs exactly one launch with a single-row schedule."""
+    a = strategies.random_triangular(n=5, seed=0, m=8)
+    b = np.arange(1.0, 6.0)
+    plan = build_plan(a, 1, SolverConfig(block_size=8, kernel_backend=kernel))
+    assert plan.bs.nb == 1 and plan.n_levels == 1
+    assert len(fused_segments(plan)) == 1
+    x = DistributedSolver(plan, _mesh1()).solve(b)
+    np.testing.assert_allclose(x, reference_solve(a, b), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kernel", BACKENDS)
+@pytest.mark.parametrize("sched", ["levelset", "syncfree"])
+def test_single_entry_matrix(kernel, sched):
+    """n == 1: one row, one diagonal entry, no updates."""
+    a = strategies.single_entry_matrix(v=3.0)
+    plan = build_plan(a, 1, SolverConfig(block_size=8, sched=sched,
+                                         kernel_backend=kernel))
+    x = DistributedSolver(plan, _mesh1()).solve(np.array([6.0]))
+    np.testing.assert_allclose(x, [2.0], rtol=0, atol=0)
+
+
+def test_empty_matrix_multirhs_fused():
+    """(0, R) panels through the fused paths (multi-RHS kernel arithmetic)."""
+    a = strategies.empty_matrix()
+    for kernel in ("fused", "fused_streamed"):
+        plan = build_plan(a, 1, SolverConfig(block_size=8, kernel_backend=kernel))
+        x = DistributedSolver(plan, _mesh1()).solve(np.zeros((0, 3)))
+        assert x.shape == (0, 3)
+
+
+def test_zero_tile_segment_multidevice_plan():
+    """A multi-device plan with an empty cut fuses the whole solve into one
+    launch even when some levels schedule zero tiles on some device."""
+    from repro.sparse import suite
+
+    a = suite.block_diagonal_parallel(512, 8, 3.0, seed=2)
+    plan = build_plan(a, 8, SolverConfig(block_size=16, partition="contiguous",
+                                         kernel_backend="fused_streamed"))
+    assert plan.n_boundary_rows == 0
+    assert len(fused_segments(plan)) == 1
+    assert dispatch_stats(plan)["exchanges"] == 0

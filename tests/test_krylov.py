@@ -4,7 +4,8 @@ import numpy as np
 import pytest
 import scipy.sparse.linalg as spla
 
-from repro import compat
+import strategies
+from strategies import mesh1 as _mesh1
 from repro.core import DistributedSolver, SolverConfig, build_plan
 from repro.krylov import (
     DistributedSpMV,
@@ -18,17 +19,10 @@ from repro.sparse import suite
 from repro.sparse.matrix import reference_solve, to_scipy
 
 
-def _mesh1():
-    return compat.make_mesh((1,), ("x",))
-
-
 @pytest.fixture(scope="module")
 def spd_problem():
     """grid2d_factor-derived SPD system (the paper's structured-grid regime)."""
-    a = spd_lower_from_triangular(suite.grid2d_factor(18, seed=0))
-    b = np.random.default_rng(0).uniform(-1, 1, a.n)
-    full = to_scipy(symmetric_full_csr(a)).tocsc()
-    return a, b, full
+    return strategies.spd_problem(side=18, seed=0)
 
 
 CFG = SolverConfig(block_size=16)

@@ -6,24 +6,12 @@ acceptance checks for the malleable strategy always run.
 import numpy as np
 import pytest
 
-from repro import compat
+from strategies import mesh1 as _mesh1, random_blocks as _blocks
 from repro.core import SolverConfig, build_plan, sptrsv
 from repro.core.blocking import build_blocks
 from repro.core.partition import block_row_cost, cut_stats, make_partition
 from repro.sparse import suite
-from repro.sparse.matrix import lower_triangular_from_coo, reference_solve
-
-
-def _blocks(n=200, B=8, seed=0, m=600):
-    rng = np.random.default_rng(seed)
-    a = lower_triangular_from_coo(n, rng.integers(0, n, m), rng.integers(0, n, m), rng=rng)
-    return build_blocks(a, B)
-
-
-def _mesh1():
-    import jax
-
-    return compat.make_mesh((1,), ("x",), devices=jax.devices()[:1])
+from repro.sparse.matrix import reference_solve
 
 
 # ---------------------------------------------------------------------------

@@ -86,6 +86,51 @@ def test_fused_backend_bit_exact_all_modes_on_8_devices():
 
 
 @pytest.mark.slow
+def test_streamed_store_bit_exact_all_modes_on_8_devices():
+    """Streaming HBM tile store vs the resident fused megakernel, all four
+    sched x comm modes, on a real 8-device mesh — bit-identical on the dyadic
+    exact-arithmetic structure (for sched="syncfree" the streamed backend is
+    defined to behave exactly like "fused"; asserting equality there pins that
+    contract too)."""
+    print(run_py("""
+        import numpy as np, jax
+        from repro import compat
+        from repro.core import DistributedSolver, SolverConfig, build_plan
+        from repro.core.solver import dispatch_stats, fused_streaming
+        from repro.sparse import suite
+        from repro.sparse.matrix import CSR, reference_solve
+
+        a0 = suite.random_levelled(400, 8, 4.0, seed=6)
+        rows = np.repeat(np.arange(a0.n), np.diff(a0.row_ptr))
+        rng = np.random.default_rng(0)
+        signs = rng.choice(np.array([-0.5, -0.25, 0.25, 0.5], np.float32),
+                           size=a0.val.shape)
+        val = np.where(a0.col_idx == rows, 1.0, signs).astype(np.float32)
+        a = CSR(n=a0.n, row_ptr=a0.row_ptr, col_idx=a0.col_idx, val=val)
+        b = np.random.default_rng(1).integers(-4, 5, a.n).astype(np.float32)
+        x_ref = reference_solve(a, b)
+        mesh = compat.make_mesh((8,), ("x",))
+        for comm in ("zerocopy", "unified"):
+            for sched in ("levelset", "syncfree"):
+                fu = DistributedSolver(build_plan(a, 8, SolverConfig(
+                    block_size=16, comm=comm, sched=sched,
+                    kernel_backend="fused")), mesh)
+                st_plan = build_plan(a, 8, SolverConfig(
+                    block_size=16, comm=comm, sched=sched,
+                    kernel_backend="fused_streamed"))
+                st = DistributedSolver(st_plan, mesh)
+                if sched == "levelset":
+                    ds = dispatch_stats(st_plan)
+                    assert fused_streaming(st_plan) and ds["streamed"], (comm, sched)
+                    assert ds["stream_dma_bytes"] > 0, (comm, sched)
+                xf, xs = fu.solve(b), st.solve(b)
+                assert np.array_equal(xf, xs), (comm, sched)
+                assert np.array_equal(xs, x_ref.astype(np.float32)), (comm, sched)
+        print("OK")
+    """))
+
+
+@pytest.mark.slow
 def test_numeric_refresh_bit_identical_all_modes_on_8_devices():
     """Factorizing new values through the session context must be
     bit-identical to a fresh build_plan on the same pattern — plans AND

@@ -4,15 +4,9 @@ import pytest
 pytest.importorskip("hypothesis")  # property suite is optional (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
+from strategies import random_blocks as _blocks
 from repro.core.blocking import build_blocks
 from repro.core.partition import cut_stats, make_partition
-from repro.sparse.matrix import lower_triangular_from_coo
-
-
-def _blocks(n=200, B=8, seed=0, m=600):
-    rng = np.random.default_rng(seed)
-    a = lower_triangular_from_coo(n, rng.integers(0, n, m), rng.integers(0, n, m), rng=rng)
-    return build_blocks(a, B)
 
 
 @given(st.integers(1, 8), st.integers(1, 16), st.integers(0, 1000))

@@ -1,0 +1,90 @@
+"""Property-test layer over the shared strategies (tests/strategies.py).
+
+Where the named suites pin specific regimes, these properties sweep the
+structure space: random levelled/banded triangular systems against the scipy
+oracle, dyadic draws for executor bit-identity (switch vs fused vs
+fused-streamed — the streaming HBM tile store must never change a bit), and
+plan/partition invariants that every generated schedule must satisfy.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property suite is optional (requirements-dev.txt)
+from hypothesis import HealthCheck, assume, given, settings
+
+import strategies
+from repro.core import DistributedSolver, SolverConfig, build_plan
+from repro.core.partition import make_partition
+from repro.core.solver import fused_segments, level_widths
+from repro.sparse.matrix import reference_solve
+
+SETTINGS = dict(deadline=None, derandomize=True,
+                suppress_health_check=[HealthCheck.too_slow,
+                                       HealthCheck.filter_too_much,
+                                       HealthCheck.data_too_large])
+
+
+@pytest.mark.parametrize("sched", ["levelset", "syncfree"])
+@settings(max_examples=8, **SETTINGS)
+@given(problem=strategies.triangular_problems())
+def test_solver_matches_oracle(problem, sched):
+    a, b = problem
+    cfg = SolverConfig(block_size=16, sched=sched)
+    x = DistributedSolver(build_plan(a, 1, cfg), strategies.mesh1()).solve(b)
+    np.testing.assert_allclose(x, reference_solve(a, b), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=5, **SETTINGS)
+@given(problem=strategies.dyadic_problems())
+def test_executors_bit_identical_on_dyadic_draws(problem):
+    """switch (pallas), fused, and fused_streamed all produce identical bits
+    on any exact-arithmetic draw — the generated-structure version of the
+    pinned EXACT_MATRICES comparisons."""
+    a, b = problem
+    # exactness is a property of the draw's depth/magnitudes, not of the
+    # executors under test — skip the (rare) draws that round in float32
+    assume(strategies.exactness_holds(a, b))
+    mesh = strategies.mesh1()
+    xs = {}
+    for kb in ("pallas", "fused", "fused_streamed"):
+        cfg = SolverConfig(block_size=16, kernel_backend=kb)
+        xs[kb] = DistributedSolver(build_plan(a, 1, cfg), mesh).solve(b)
+    np.testing.assert_array_equal(xs["pallas"], xs["fused"])
+    np.testing.assert_array_equal(xs["fused"], xs["fused_streamed"])
+    np.testing.assert_array_equal(xs["fused_streamed"], reference_solve(a, b))
+
+
+@settings(max_examples=15, **SETTINGS)
+@given(problem=strategies.triangular_problems(max_n=200))
+def test_plan_schedule_invariants(problem):
+    """Every generated plan satisfies the compacted-schedule contract:
+    offsets partition the flats at bucket widths, every row is scheduled
+    exactly once, and the fused segments tile [0, T) in order."""
+    a, _ = problem
+    plan = build_plan(a, 4, SolverConfig(block_size=8))
+    wid = level_widths(plan)
+    T = plan.n_levels
+    assert wid.shape == (T, 3)
+    np.testing.assert_array_equal(
+        plan.lvl_off[:, 0], np.concatenate([[0], np.cumsum(wid[:-1, 0])]))
+    owned = np.concatenate(
+        [plan.solve_rows[d][plan.solve_rows[d] >= 0] for d in range(4)])
+    np.testing.assert_array_equal(np.sort(owned), np.arange(plan.bs.nb))
+    segs = fused_segments(plan)
+    assert segs[0, 0] == 0 and segs[-1, 1] == T
+    np.testing.assert_array_equal(segs[1:, 0], segs[:-1, 1])
+
+
+@pytest.mark.parametrize("strategy", ["taskpool", "contiguous", "malleable"])
+@settings(max_examples=20, **SETTINGS)
+@given(bs=strategies.block_structures())
+def test_partition_invariants(bs, strategy):
+    """Ownership/boundary invariants hold for every strategy on every
+    generated block structure (extends the taskpool-only property)."""
+    part = make_partition(bs, 4, strategy, 4)
+    assert part.owner.shape == (bs.nb,)
+    assert part.owner.min() >= 0 and part.owner.max() < 4
+    remote = part.owner[bs.off_cols] != part.owner[bs.off_rows]
+    expect = np.zeros(bs.nb, bool)
+    expect[bs.off_rows[remote]] = True
+    assert np.array_equal(part.boundary, expect)

@@ -1,27 +1,17 @@
-"""SpTRSV end-to-end vs scipy oracle — all scheduling/comm/partition modes."""
-import jax
+"""SpTRSV end-to-end vs scipy oracle — all scheduling/comm/partition modes.
+
+Matrix generators live in ``tests/strategies.py`` (shared with the superstep,
+malleable, and krylov suites).
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import compat
+from strategies import SOLVER_MATRICES as MATRICES, mesh1 as _mesh1
 from repro.core import DistributedSolver, SolverConfig, build_plan, solve_local, sptrsv
 from repro.core.blocking import pad_rhs, unpad_x
 from repro.sparse import suite
 from repro.sparse.matrix import reference_solve
-
-
-def _mesh1():
-    return compat.make_mesh((1,), ("x",), devices=jax.devices()[:1])
-
-
-MATRICES = {
-    "levelled": lambda: suite.random_levelled(400, 24, 4.0, seed=3),
-    "chain": lambda: suite.chain(150),
-    "grid": lambda: suite.grid2d_factor(18, seed=1),
-    "parallel": lambda: suite.block_diagonal_parallel(300, 12, 3.0, seed=2),
-    "two_level": lambda: suite.random_levelled(300, 2, 8.0, seed=4),
-}
 
 
 @pytest.fixture(scope="module", params=list(MATRICES))

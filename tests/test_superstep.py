@@ -2,21 +2,17 @@
 
 Bit-exactness strategy: XLA does not promise a reduction order across two
 separately-compiled programs, so float comparisons between executors are only
-meaningful when the arithmetic is *exact*. The ``_dyadic`` matrices keep the
-suite's structure (skewed / banded level distributions) but substitute unit
-diagonals and ±0.25/±0.5 off-diagonal values with shallow dependency depth,
-so every intermediate is exactly representable in float32 — any two correct
-executions produce identical bits, and any schedule/masking/exchange bug in
-the fused kernel produces a loudly different answer. ``assert_array_equal``
-then really is bit-exactness. Real-valued suites ride along with the scipy
-oracle at the usual tolerance.
+meaningful when the arithmetic is *exact* — see the dyadic contract in
+``tests/strategies.py`` (the shared home of these generators).
+``assert_array_equal`` then really is bit-exactness. Real-valued suites ride
+along with the scipy oracle at the usual tolerance.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import compat
+import strategies
+from strategies import EXACT_MATRICES, dyadic_rhs, mesh1 as _mesh1
 from repro.core import (
     DistributedSolver, SolverConfig, build_plan, dispatch_stats,
     fused_segments, solve_local, sptrsv,
@@ -25,55 +21,21 @@ from repro.core.blocking import pad_rhs
 from repro.core.solver import _frontier_ladder, level_widths
 from repro.kernels import ops
 from repro.sparse import suite
-from repro.sparse.matrix import CSR, reference_solve
-
-
-def _mesh1():
-    return compat.make_mesh((1,), ("x",), devices=jax.devices()[:1])
-
-
-def _dyadic(a: CSR, seed: int = 0) -> CSR:
-    """Same sparsity, exactly-representable values: unit diagonal, ±2^-k
-    off-diagonals. With the shallow (≤8 level) structures below, every
-    intermediate fits float32 exactly, making cross-executor comparisons
-    bit-meaningful."""
-    rows = np.repeat(np.arange(a.n), np.diff(a.row_ptr))
-    is_diag = a.col_idx == rows
-    rng = np.random.default_rng(seed)
-    signs = rng.choice(np.array([-0.5, -0.25, 0.25, 0.5], np.float32),
-                       size=a.val.shape)
-    val = np.where(is_diag, 1.0, signs).astype(np.float32)
-    return CSR(n=a.n, row_ptr=a.row_ptr, col_idx=a.col_idx, val=val)
-
-
-# suite-shaped structures: skewed level-size distribution and banded locality
-EXACT_MATRICES = {
-    "skewed": lambda: _dyadic(suite.random_levelled(400, 8, 4.0, seed=6)),
-    "banded": lambda: _dyadic(
-        suite.random_levelled(300, 8, 4.0, seed=7, locality=0.8)),
-}
+from repro.sparse.matrix import reference_solve
 
 
 @pytest.fixture(scope="module", params=list(EXACT_MATRICES))
 def exact_problem(request):
     a = EXACT_MATRICES[request.param]()
-    b = np.random.default_rng(1).integers(-4, 5, a.n).astype(np.float32)
+    b = dyadic_rhs(a.n)
     x_ref = reference_solve(a, b)
     return a, b, x_ref
-
-
-def _exactness_holds(a, b):
-    """Self-check of the test premise: the float32 solve equals the float64
-    oracle bit-for-bit, i.e. no rounding happened anywhere."""
-    x64 = reference_solve(a, b)
-    return np.array_equal(x64.astype(np.float32).astype(np.float64), x64)
 
 
 def test_dyadic_matrices_are_exact():
     for name, make in EXACT_MATRICES.items():
         a = make()
-        b = np.random.default_rng(1).integers(-4, 5, a.n).astype(np.float32)
-        assert _exactness_holds(a, b), name
+        assert strategies.exactness_holds(a, dyadic_rhs(a.n)), name
 
 
 # ---------------------------------------------------------------------------
@@ -145,6 +107,152 @@ def test_fused_real_values_match_oracle():
             x = sptrsv(a, b, mesh=mesh, config=cfg)
             np.testing.assert_allclose(x, x_ref, rtol=2e-4, atol=2e-4,
                                        err_msg=f"{name}/{sched}")
+
+
+# ---------------------------------------------------------------------------
+# streaming HBM tile store (kernel_backend="fused_streamed")
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("block_size", [8, 16])
+def test_streamed_bit_exact_vs_resident_and_switch(exact_problem, block_size):
+    """The streaming store changes data *movement* only: streamed, resident
+    fused, and the lax.switch executor agree bit-for-bit on the dyadic
+    exact-arithmetic suites."""
+    a, b, x_ref = exact_problem
+    mesh = _mesh1()
+    xs = {}
+    for kb in ("pallas", "fused", "fused_streamed"):
+        xs[kb] = DistributedSolver(build_plan(
+            a, 1, SolverConfig(block_size=block_size, kernel_backend=kb)),
+            mesh).solve(b)
+    np.testing.assert_array_equal(xs["pallas"], xs["fused"])
+    np.testing.assert_array_equal(xs["fused"], xs["fused_streamed"])
+    np.testing.assert_allclose(xs["fused_streamed"], x_ref, rtol=0, atol=0)
+
+
+def test_streamed_multirhs_bit_exact(exact_problem):
+    """(n, R) panels stream the same tile slices once per solve, whatever R."""
+    a, b, _ = exact_problem
+    rng = np.random.default_rng(2)
+    B = np.column_stack([b, rng.integers(-3, 4, (a.n, 2))]).astype(np.float32)
+    mesh = _mesh1()
+    fu = DistributedSolver(build_plan(
+        a, 1, SolverConfig(block_size=16, kernel_backend="fused")), mesh)
+    st = DistributedSolver(build_plan(
+        a, 1, SolverConfig(block_size=16, kernel_backend="fused_streamed")), mesh)
+    np.testing.assert_array_equal(fu.solve(B), st.solve(B))
+
+
+def test_streamed_transpose_solve(exact_problem):
+    a, b, _ = exact_problem
+    mesh = _mesh1()
+    xf = sptrsv(a, b, mesh=mesh, transpose=True,
+                config=SolverConfig(block_size=16, kernel_backend="fused"))
+    xs = sptrsv(a, b, mesh=mesh, transpose=True,
+                config=SolverConfig(block_size=16, kernel_backend="fused_streamed"))
+    np.testing.assert_array_equal(xf, xs)
+
+
+def test_streamed_vmem_buffers_sized_by_max_level_slice():
+    """Acceptance (trace-time): the streamed kernel's VMEM scratch is two
+    double-buffers sized by the *max per-level bucket width* — never by the
+    total tile/diag store. Recorded by superstep.LAST_STREAM_ALLOC when the
+    streamed launch traces."""
+    from repro.kernels import superstep
+    from repro.core.solver import level_widths as _lw, streamed_stores
+
+    a = suite.random_levelled(600, 30, 3.0, seed=8)
+    b = np.random.default_rng(5).uniform(-1, 1, a.n)
+    plan = build_plan(a, 1, SolverConfig(block_size=8,
+                                         kernel_backend="fused_streamed"))
+    wid = _lw(plan)
+    WS, WU = int(wid[:, 0].max()), int(wid[:, 1].max())
+    total_tiles = plan.tiles.shape[1]
+    assert WU < total_tiles / 4, (WU, total_tiles)  # premise: many levels
+
+    superstep.LAST_STREAM_ALLOC.clear()
+    x = DistributedSolver(plan, _mesh1()).solve(b)
+    np.testing.assert_allclose(x, reference_solve(a, b), rtol=2e-4, atol=2e-4)
+    alloc = superstep.LAST_STREAM_ALLOC
+    assert alloc, "streamed launch must record its trace-time scratch shapes"
+    B = plan.bs.B
+    assert alloc["diag_buf"] == (2, WS, B, B)
+    assert alloc["tile_buf"] == (2, WU, B, B)
+    # the HBM stores carry the whole schedule; VMEM only the widest slice x2
+    diag_s, tiles_s = streamed_stores(plan)
+    assert alloc["diag_store"] == diag_s.shape[1:]
+    assert alloc["tile_store"] == tiles_s.shape[1:]
+    assert 2 * WU < tiles_s.shape[1]
+
+
+def test_fused_auto_streams_above_vmem_limit(monkeypatch, exact_problem):
+    """Plain kernel_backend="fused" upgrades to the streaming store when the
+    resident footprint exceeds REPRO_STREAM_VMEM_LIMIT — and still matches
+    the switch executor bit-for-bit."""
+    from repro.core.solver import fused_streaming, fused_vmem_bytes
+
+    a, b, _ = exact_problem
+    cfg = SolverConfig(block_size=16, kernel_backend="fused")
+    plan = build_plan(a, 1, cfg)
+
+    monkeypatch.setenv("REPRO_STREAM_VMEM_LIMIT", str(2**40))
+    assert not fused_streaming(plan)
+    assert not dispatch_stats(plan)["streamed"]
+
+    monkeypatch.setenv("REPRO_STREAM_VMEM_LIMIT", "1")
+    assert fused_streaming(plan)
+    ds = dispatch_stats(plan)
+    assert ds["streamed"] and ds["stream_dma_bytes"] > 0
+    # the reported footprint is the streamed one: bounded by the widest level
+    # slice, strictly below the resident store it replaced
+    assert ds["fused_vmem_bytes"] == fused_vmem_bytes(plan, streamed=True)
+    assert ds["fused_vmem_bytes"] < fused_vmem_bytes(plan, streamed=False)
+
+    xs = DistributedSolver(build_plan(
+        a, 1, SolverConfig(block_size=16, kernel_backend="pallas")),
+        _mesh1()).solve(b)
+    xa = DistributedSolver(plan, _mesh1()).solve(b)
+    np.testing.assert_array_equal(xs, xa)
+
+
+def test_streamed_vmem_footprint_bounded_by_widest_slice(monkeypatch):
+    """Acceptance: on a matrix whose total tile store exceeds the resident
+    threshold, the streamed footprint is bounded by the widest level slice
+    (double-buffered) plus the O(n·B) vectors, not by the tile count."""
+    from repro.core.solver import (fused_streaming, fused_vmem_bytes,
+                                   level_widths as _lw)
+
+    a = suite.random_levelled(600, 30, 3.0, seed=8)
+    plan = build_plan(a, 1, SolverConfig(block_size=8, kernel_backend="fused"))
+    resident = fused_vmem_bytes(plan, streamed=False)
+    monkeypatch.setenv("REPRO_STREAM_VMEM_LIMIT", str(resident - 1))
+    assert fused_streaming(plan)  # total store exceeds the threshold
+    streamed = fused_vmem_bytes(plan, streamed=True)
+    wid = _lw(plan)
+    B = plan.bs.B
+    widest_slice = 2 * (int(wid[:, 0].max()) + int(wid[:, 1].max())) * B * B * 4
+    vectors = resident - (plan.diag.shape[0] + plan.tiles.shape[1]) * B * B * 4
+    assert streamed == widest_slice + vectors
+    assert streamed < resident
+
+
+def test_streamed_refresh_rearms_hbm_stores(exact_problem):
+    """Numeric refresh must reach the schedule-ordered HBM stores: after
+    DistributedSolver.refresh the streamed executor solves with the NEW
+    values, bit-identically to a fresh build on them."""
+    from repro.core import refresh_plan
+    from repro.sparse.matrix import CSR
+
+    a, b, _ = exact_problem
+    a2 = CSR(n=a.n, row_ptr=a.row_ptr, col_idx=a.col_idx, val=a.val * 0.5)
+    mesh = _mesh1()
+    cfg = SolverConfig(block_size=16, kernel_backend="fused_streamed")
+    solver = DistributedSolver(build_plan(a, 1, cfg), mesh)
+    solver.solve(b)  # compile on a's values
+    solver.refresh(refresh_plan(solver.plan, a2))
+    fresh = DistributedSolver(build_plan(a2, 1, cfg), mesh)
+    np.testing.assert_array_equal(solver.solve(b), fresh.solve(b))
 
 
 # ---------------------------------------------------------------------------
