@@ -33,9 +33,37 @@ MIN_US = 50.0  # ignore rows faster than this: pure scheduler noise on CI
 
 
 def load_rows(path: str) -> dict:
+    """Timing rows only; ``_``-prefixed keys (``_provenance``, ``_metrics``)
+    are metadata written by run.py and never participate in gating."""
     with open(path) as f:
         rows = json.load(f)
-    return {k: float(v.get("us_per_call", 0.0)) for k, v in rows.items()}
+    return {k: float(v.get("us_per_call", 0.0)) for k, v in rows.items()
+            if not k.startswith("_")}
+
+
+def load_provenance(path: str) -> dict:
+    """The run's ``_provenance`` block ({} for pre-provenance bench files)."""
+    with open(path) as f:
+        rows = json.load(f)
+    prov = rows.get("_provenance")
+    return prov if isinstance(prov, dict) else {}
+
+
+def provenance_note(old_path: str, new_path: str) -> str:
+    """One line contrasting the environments of two runs — shown next to gate
+    failures so a regression caused by a jax upgrade or a different device
+    fleet is recognizable at a glance. Empty when nothing differs (or no
+    provenance was recorded)."""
+    old, new = load_provenance(old_path), load_provenance(new_path)
+    if not old or not new:
+        return ""
+    diffs = []
+    for key in ("jax_version", "platform", "device_kind", "device_count",
+                "git_sha"):
+        ov, nv = old.get(key), new.get(key)
+        if ov != nv and (ov or nv):
+            diffs.append(f"{key}: {ov!r} -> {nv!r}")
+    return "; ".join(diffs)
 
 
 def _median(vals: list) -> float:
@@ -147,6 +175,9 @@ def main(argv=None) -> int:
               f"fused/switch {base:.2f} -> {ratio:.2f} "
               f"(>{1 + args.max_fused_regression:.2f}x)")
     if regressions or fused_regr:
+        note = provenance_note(args.files[0], args.files[-1])
+        if note:
+            print(f"[compare] provenance drift (informational): {note}")
         print(f"[compare] FAIL: {len(regressions)} row(s) regressed "
               f">{args.max_regression:.0%}, {len(fused_regr)} fused-ratio "
               f"regression(s)")

@@ -52,6 +52,39 @@ class _Tee(io.TextIOBase):
         self.stream.flush()
 
 
+def provenance() -> dict:
+    """Environment fingerprint stored under the ``_provenance`` key of the
+    bench JSON: enough to explain a cross-run timing shift (different jax,
+    different device fleet, different commit) without gating on it. Every
+    field degrades to a placeholder rather than failing the bench run."""
+    prov = {"timestamp_utc": "", "jax_version": "", "platform": "",
+            "device_kind": "", "device_count": 0, "git_sha": ""}
+    import datetime
+
+    prov["timestamp_utc"] = datetime.datetime.now(
+        datetime.timezone.utc).isoformat(timespec="seconds")
+    try:
+        import jax
+
+        prov["jax_version"] = jax.__version__
+        devs = jax.devices()
+        prov["platform"] = devs[0].platform if devs else ""
+        prov["device_kind"] = devs[0].device_kind if devs else ""
+        prov["device_count"] = len(devs)
+    except Exception:
+        pass
+    try:
+        import subprocess
+
+        prov["git_sha"] = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)), timeout=10,
+        ).stdout.strip()
+    except Exception:
+        pass
+    return prov
+
+
 def rows_from_csv(text: str) -> dict:
     """Parse ``name,us_per_call,derived`` lines into the JSON row map."""
     rows = {}
@@ -108,8 +141,17 @@ def main() -> None:
     pr = os.environ.get("REPRO_PR_NUMBER")
     default = f"BENCH_PR{pr}.json" if pr else "BENCH.json"
     out = os.environ.get("REPRO_BENCH_JSON", default)
+    blob = rows_from_csv(tee.buffer_text.getvalue())
+    # "_"-prefixed keys are metadata, not timing rows: compare.py ignores
+    # them for gating and surfaces provenance next to failures
+    blob["_provenance"] = provenance()
+    from repro.obs.metrics import get_registry
+
+    snap = get_registry().snapshot()
+    if snap:
+        blob["_metrics"] = snap
     with open(out, "w") as f:
-        json.dump(rows_from_csv(tee.buffer_text.getvalue()), f, indent=1, sort_keys=True)
+        json.dump(blob, f, indent=1, sort_keys=True)
     sys.stderr.write(f"[bench] wrote {out}\n")
 
 

@@ -36,6 +36,8 @@ from repro.core.solver import (
     stream_dma_bytes_per_solve,
 )
 from repro.kernels import ops
+from repro.obs import calibration as _calibration
+from repro.obs.trace import get_tracer
 
 # One executor dispatch (gather+kernel launch or collective) costs about this
 # many block-op units in the model — the knob that lets launch-bound schedules
@@ -66,12 +68,37 @@ class AutoDecision:
     scores: dict  # (sched, comm, kernel) -> model score, block-op units
     probe_us: dict  # (sched, comm, kernel) -> measured us/solve ({} unless probed)
     probe_overhead_us: float  # wall time spent probing (compile + measure)
+    # (sched, comm, kernel) -> wall time of the candidate's first (compiling)
+    # solve, kept OUT of probe_us so the measured ranking never depends on
+    # which candidate compiled last ({} unless probed)
+    compile_us: dict = dataclasses.field(default_factory=dict)
 
     def as_derived(self) -> str:
         """Compact ``k=v;...`` form for bench rows / dispatch_stats."""
         sched, comm, kernel = self.chosen
         return (f"sched={sched};comm={comm};kernel={kernel};mode={self.mode};"
                 f"probe_overhead_us={self.probe_overhead_us:.0f}")
+
+
+def plan_work_units(plan: Plan, R: int = 1) -> tuple[float, float, float]:
+    """``(su, tu, tf)`` schedule work units for one solve at RHS width R:
+    the regressors of the compute term ``w_solve*su + w_tile_mem*tu +
+    w_tile_flop*tf``. Shared by :func:`estimate_plan_cost` and the
+    calibration feedback recorder so fitted weights mean exactly what the
+    scorer multiplies them by."""
+    cfg = plan.config
+    wid = level_widths(plan) if plan.n_levels else np.zeros((0, 3), np.int64)
+    fused = ops.executor_backend(cfg.kernel_backend) in ops.FUSED_BACKENDS
+    if cfg.sched == "levelset" or fused:
+        # frontier-bucketed syncfree work is approximated by the same
+        # per-level schedule widths the levelset executors dispatch
+        n_solve, n_tiles = float(wid[:, 0].sum()), float(wid[:, 1].sum())
+    else:
+        # dense masked scan: every sweep touches all local rows and tiles
+        sweeps = plan.n_supersteps
+        n_solve = float(sweeps * plan.local_rows.shape[1])
+        n_tiles = float(sweeps * plan.tiles.shape[1])
+    return n_solve * R, n_tiles, n_tiles * R
 
 
 def estimate_plan_cost(plan: Plan, R: int = 1) -> float:
@@ -87,29 +114,16 @@ def estimate_plan_cost(plan: Plan, R: int = 1) -> float:
     cfg = plan.config
     B = plan.bs.B
     w_solve, w_tile_mem, w_tile_flop = calibrate_weights(B, backend=cfg.kernel_backend)
-    solve_cost = w_solve * R
-    tile_cost = w_tile_mem + w_tile_flop * R
     backend = ops.executor_backend(cfg.kernel_backend)
     fused = backend in ops.FUSED_BACKENDS
-    wid = level_widths(plan) if plan.n_levels else np.zeros((0, 3), np.int64)
+    su, tu, tf = plan_work_units(plan, R)
+    compute = w_solve * su + w_tile_mem * tu + w_tile_flop * tf
     if cfg.sched == "levelset":
-        compute = float(wid[:, 0].sum()) * solve_cost + float(wid[:, 1].sum()) * tile_cost
         ds = dispatch_stats(plan)
         launches = (ds["fused_launches"] if fused
                     else ds["switch_dispatches"]) + ds["exchanges"]
     else:
-        sweeps = plan.n_supersteps
-        if fused:
-            # frontier-bucketed: per-sweep work is the ladder-rounded frontier,
-            # approximated by the per-level schedule widths
-            compute = (float(wid[:, 0].sum()) * solve_cost
-                       + float(wid[:, 1].sum()) * tile_cost)
-        else:
-            # dense masked scan: every sweep touches all local rows and tiles
-            MLR = plan.local_rows.shape[1]
-            MLT = plan.tiles.shape[1]
-            compute = sweeps * (MLR * solve_cost + MLT * tile_cost)
-        launches = 2 * sweeps  # one solve + one update dispatch per sweep
+        launches = 2 * plan.n_supersteps  # one solve + one update dispatch per sweep
     comm = plan.comm_bytes_per_solve * FLOPS_PER_BYTE / (B * B)
     # streaming buys bounded VMEM residency with per-level HBM DMA bursts;
     # score those bytes at the machine balance like the collective payload
@@ -162,51 +176,76 @@ def tune(a, options, mesh, *, part=None, bs=None):
     from repro.core.solver import build_plan
 
     plans, scores = {}, {}
-    for combo in combos:
-        sched, comm, kernel = combo
-        if kernel == "fused_streamed" and (sched, comm, "fused") in plans:
-            # drop combos that resolve to a byte-identical executor as an
-            # already-enumerated candidate — same principle as the comm
-            # collapse above, never compile/probe the same program twice:
-            # syncfree defines fused_streamed == fused, and a levelset plan
-            # past the VMEM limit auto-streams plain "fused" anyway
-            if sched == "syncfree" or fused_streaming(
-                    plans[(sched, comm, "fused")], options.rhs_hint):
-                continue
-        cfg = options.to_config(sched=sched, comm=comm, kernel=kernel)
-        plans[combo] = build_plan(a, D, cfg, part=part)
-        scores[combo] = estimate_plan_cost(plans[combo], R=options.rhs_hint)
-    combos = [c for c in combos if c in plans]
-
-    probe_us: dict = {}
-    solvers: dict = {}
-    t_probe0 = time.perf_counter()
-    if options.probe_solves > 0 and len(combos) > 1:
-        import jax
-        import jax.numpy as jnp
-
-        rng = np.random.default_rng(0)
-        R = options.rhs_hint
-        b = rng.uniform(-1, 1, (a.n, R) if R > 1 else a.n).astype(np.float32)
-        b_blocks = jnp.asarray(pad_rhs(b, bs))
+    with get_tracer().span("sptrsv.autotune", n_candidates=len(combos),
+                           probe_solves=options.probe_solves) as tspan:
         for combo in combos:
-            solver = DistributedSolver(plans[combo], mesh)
-            solvers[combo] = solver
-            jax.block_until_ready(solver.solve_blocks(b_blocks))  # compile
-            times = []
-            for _ in range(options.probe_solves):
-                t0 = time.perf_counter()
-                jax.block_until_ready(solver.solve_blocks(b_blocks))
-                times.append(time.perf_counter() - t0)
-            times.sort()
-            probe_us[combo] = times[len(times) // 2] * 1e6
-        chosen = min(combos, key=lambda c: probe_us[c])
-        mode = "probed"
-    else:
-        chosen = min(combos, key=lambda c: scores[c])
-        mode = "modelled"
-    overhead = (time.perf_counter() - t_probe0) * 1e6 if probe_us else 0.0
-    decision = AutoDecision(chosen=chosen, mode=mode, scores=scores,
-                            probe_us=probe_us, probe_overhead_us=overhead)
+            sched, comm, kernel = combo
+            if kernel == "fused_streamed" and (sched, comm, "fused") in plans:
+                # drop combos that resolve to a byte-identical executor as an
+                # already-enumerated candidate — same principle as the comm
+                # collapse above, never compile/probe the same program twice:
+                # syncfree defines fused_streamed == fused, and a levelset plan
+                # past the VMEM limit auto-streams plain "fused" anyway
+                if sched == "syncfree" or fused_streaming(
+                        plans[(sched, comm, "fused")], options.rhs_hint):
+                    continue
+            cfg = options.to_config(sched=sched, comm=comm, kernel=kernel)
+            plans[combo] = build_plan(a, D, cfg, part=part)
+            scores[combo] = estimate_plan_cost(plans[combo], R=options.rhs_hint)
+        combos = [c for c in combos if c in plans]
+
+        probe_us: dict = {}
+        compile_us: dict = {}
+        solvers: dict = {}
+        t_probe0 = time.perf_counter()
+        if options.probe_solves > 0 and len(combos) > 1:
+            import jax
+            import jax.numpy as jnp
+
+            rng = np.random.default_rng(0)
+            R = options.rhs_hint
+            b = rng.uniform(-1, 1, (a.n, R) if R > 1 else a.n).astype(np.float32)
+            b_blocks = jnp.asarray(pad_rhs(b, bs))
+            store = _calibration.get_store()
+            for combo in combos:
+                with get_tracer().span("sptrsv.probe", sched=combo[0],
+                                       comm=combo[1], kernel=combo[2]) as sp:
+                    solver = DistributedSolver(plans[combo], mesh)
+                    solvers[combo] = solver
+                    # the first solve pays compilation: record it separately and
+                    # follow with an untimed warmup so the measured ranking never
+                    # depends on which candidate happened to compile last
+                    t_c = time.perf_counter()
+                    jax.block_until_ready(solver.solve_blocks(b_blocks))
+                    compile_us[combo] = (time.perf_counter() - t_c) * 1e6
+                    jax.block_until_ready(solver.solve_blocks(b_blocks))
+                    times = []
+                    for _ in range(options.probe_solves):
+                        t0 = time.perf_counter()
+                        jax.block_until_ready(solver.solve_blocks(b_blocks))
+                        times.append(time.perf_counter() - t0)
+                    times.sort()
+                    probe_us[combo] = times[len(times) // 2] * 1e6
+                    sp.set(probe_us=probe_us[combo], compile_us=compile_us[combo])
+                # feedback loop: the measured solve is a wall-clock sample of the
+                # cost model's compute term — persist it for probe-free sessions
+                su, tu, tf = plan_work_units(plans[combo], R)
+                store.record(
+                    backend=ops.executor_backend(combo[2]), B=plans[combo].bs.B,
+                    signature=_calibration.probe_signature(plans[combo], R),
+                    solve_units=su, tile_units=tu, tile_flop_units=tf, R=R,
+                    measured_us=probe_us[combo],
+                )
+            chosen = min(combos, key=lambda c: probe_us[c])
+            mode = "probed"
+        else:
+            chosen = min(combos, key=lambda c: scores[c])
+            mode = "modelled"
+        overhead = (time.perf_counter() - t_probe0) * 1e6 if probe_us else 0.0
+        decision = AutoDecision(chosen=chosen, mode=mode, scores=scores,
+                                probe_us=probe_us, probe_overhead_us=overhead,
+                                compile_us=compile_us)
+        tspan.set(chosen="/".join(chosen), mode=mode,
+                  probe_overhead_us=overhead)
     cfg = options.to_config(sched=chosen[0], comm=chosen[1], kernel=chosen[2])
     return cfg, plans[chosen], decision, solvers.get(chosen)

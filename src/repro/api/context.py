@@ -28,6 +28,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import hashlib
+import time
 
 import jax
 import numpy as np
@@ -35,6 +36,8 @@ import numpy as np
 from repro import compat
 from repro.api import autotune
 from repro.api.options import KernelBackend, PlanOptions, as_options
+from repro.obs.metrics import MetricsRegistry, get_registry, record_plan_metrics
+from repro.obs.trace import get_tracer
 from repro.core.blocking import BlockStructure, build_blocks
 from repro.core.partition import Partition, make_partition
 from repro.core.solver import (
@@ -112,9 +115,11 @@ class SpTRSVContext:
     """
 
     def __init__(self, mesh: jax.sharding.Mesh | None = None,
-                 options: PlanOptions | SolverConfig | None = None):
+                 options: PlanOptions | SolverConfig | None = None,
+                 registry: MetricsRegistry | None = None):
         self.mesh = mesh if mesh is not None else compat.make_mesh((1,), (AXIS,))
         self.options = as_options(options)
+        self.registry = registry if registry is not None else get_registry()
         self._entries: dict[tuple, SpTRSVHandle] = {}
         self._symbolic: dict[tuple, _Symbolic] = {}
         self._counters: collections.Counter = collections.Counter()
@@ -140,8 +145,10 @@ class SpTRSVContext:
             # a new handle (new tag / exec options) reusing the expensive
             # symbolic analysis is a cache hit the amortization stats must see
             self._counters["symbolic_hits"] += 1
+            self.registry.counter("session.symbolic_hits").inc()
             return sym
         self._counters["analyses"] += 1
+        self.registry.counter("session.analyses").inc()
         bs = build_blocks(a, opts.block_size)
         cost_weights = None
         if opts.calibrate_cost and opts.partition.value == "malleable":
@@ -175,27 +182,32 @@ class SpTRSVContext:
         hit = self._entries.get(key)
         if hit is not None:
             self._counters["analysis_hits"] += 1
+            self.registry.counter("session.analysis_hits").inc()
             if hit.matrix is not a and not np.array_equal(hit.matrix.val, a.val):
                 # same pattern, new numeric values: the analysis is a cache
                 # hit but the values must not go stale — refresh in place
                 self.factorize(a, hit)
             return hit
-        sym = self._analyse_symbolic(a, pat, opts)
-        if opts.is_auto:
-            tuned = sym.tuned.get(opts)
-            if tuned is not None:
-                # another handle on this analysis already paid the tuner
-                # cost (candidate plans + probes) — reuse its decision
-                config, decision = tuned
-                plan, solver = None, None
-                self._counters["auto_reuses"] += 1
+        with get_tracer().span("sptrsv.analyse", pattern=pat, tag=tag,
+                               n=int(a.n), n_devices=self.n_devices) as span:
+            sym = self._analyse_symbolic(a, pat, opts)
+            if opts.is_auto:
+                tuned = sym.tuned.get(opts)
+                if tuned is not None:
+                    # another handle on this analysis already paid the tuner
+                    # cost (candidate plans + probes) — reuse its decision
+                    config, decision = tuned
+                    plan, solver = None, None
+                    self._counters["auto_reuses"] += 1
+                else:
+                    config, plan, decision, solver = autotune.tune(
+                        a, opts, self.mesh, bs=sym.bs, part=sym.part)
+                    sym.tuned[opts] = (config, decision)
+                span.set(sched=config.sched, comm=config.comm,
+                         kernel=config.kernel_backend or "default")
             else:
-                config, plan, decision, solver = autotune.tune(
-                    a, opts, self.mesh, bs=sym.bs, part=sym.part)
-                sym.tuned[opts] = (config, decision)
-        else:
-            config = opts.to_config()
-            plan, decision, solver = None, None, None
+                config = opts.to_config()
+                plan, decision, solver = None, None, None
         handle = SpTRSVHandle(pattern=pat, tag=tag, options=opts, config=config,
                               matrix=a, symbolic=sym, plan=plan, auto=decision)
         if solver is not None:  # probing already compiled the winner
@@ -244,16 +256,19 @@ class SpTRSVContext:
                     "call analyse() for a new pattern"
                 )
         self._counters["factorizes"] += 1
+        self.registry.counter("session.factorizes").inc()
         handle.n_factorize += 1
         handle.matrix = a
-        if handle.plan is not None:
-            handle.plan = refresh_plan(handle.plan, a)
-            if False in handle.solvers:
-                handle.solvers[False].refresh(handle.plan)
-        if handle.tplan is not None:
-            handle.tplan = refresh_plan(handle.tplan, a)
-            if True in handle.solvers:
-                handle.solvers[True].refresh(handle.tplan)
+        with get_tracer().span("sptrsv.factorize", pattern=handle.pattern,
+                               tag=handle.tag, n_factorize=handle.n_factorize):
+            if handle.plan is not None:
+                handle.plan = refresh_plan(handle.plan, a)
+                if False in handle.solvers:
+                    handle.solvers[False].refresh(handle.plan)
+            if handle.tplan is not None:
+                handle.tplan = refresh_plan(handle.tplan, a)
+                if True in handle.solvers:
+                    handle.solvers[True].refresh(handle.tplan)
         return handle
 
     # -- solve ------------------------------------------------------------
@@ -274,11 +289,24 @@ class SpTRSVContext:
         shape = (transpose, R)
         if shape in handle.shapes:
             self._counters["solve_cache_hits"] += 1
+            self.registry.counter("session.solve_cache_hits").inc()
         else:
             self._counters["solve_cache_misses"] += 1
+            self.registry.counter("session.solve_cache_misses").inc()
             handle.shapes.add(shape)
         self._counters["solves"] += 1
-        return solver.solve(b)
+        self.registry.counter("session.solves").inc()
+        # the span (and the per-solve wall-clock histogram) covers host-side
+        # dispatch + device execution of the already-compiled program; the
+        # tracer never enters traced computation, so results are bit-identical
+        # with tracing on or off
+        with get_tracer().span("sptrsv.solve", pattern=handle.pattern,
+                               tag=handle.tag, transpose=transpose, R=R):
+            t0 = time.perf_counter()
+            x = solver.solve(b)
+            self.registry.histogram("session.solve_us").observe(
+                (time.perf_counter() - t0) * 1e6)
+        return x
 
     def executor(self, handle: SpTRSVHandle, *, transpose: bool = False
                  ) -> DistributedSolver:
@@ -318,6 +346,7 @@ class SpTRSVContext:
             stats["auto"] = {
                 "chosen": d.chosen, "mode": d.mode,
                 "scores": dict(d.scores), "probe_us": dict(d.probe_us),
+                "compile_us": dict(d.compile_us),
                 "probe_overhead_us": d.probe_overhead_us,
             }
         return stats
@@ -331,3 +360,25 @@ class SpTRSVContext:
         misses = c.get("analyses", 0) + c.get("solve_cache_misses", 0)
         c["cache_hit_rate"] = hits / (hits + misses) if hits + misses else 0.0
         return c
+
+    def metrics_snapshot(self, handle: SpTRSVHandle | None = None) -> dict:
+        """One JSON-safe view over the session's registry: runtime counters
+        and the solve wall-clock histogram, the derived cache hit rate, and —
+        given a handle — that handle's plan-static dispatch/cut gauges plus
+        recorded auto probe/compile timings (mirrored into the registry so a
+        single sink sees everything)."""
+        self.registry.gauge("session.cache_hit_rate").set(
+            self.stats()["cache_hit_rate"])
+        if handle is not None:
+            record_plan_metrics(self.registry, self.plan(handle))
+            if handle.auto is not None:
+                d = handle.auto
+                self.registry.gauge("auto.probe_overhead_us").set(
+                    d.probe_overhead_us)
+                for combo, us in d.probe_us.items():
+                    self.registry.gauge(
+                        "auto.probe_us." + "/".join(combo)).set(us)
+                for combo, us in d.compile_us.items():
+                    self.registry.gauge(
+                        "auto.compile_us." + "/".join(combo)).set(us)
+        return self.registry.snapshot()

@@ -49,10 +49,32 @@ def _term(flops: float, bytes_: float, analytic_flops: float,
     return f + FLOPS_PER_BYTE * by
 
 
-@functools.lru_cache(maxsize=None)
-def calibrate_weights(B: int = 32, backend: str | None = None) -> tuple:
+def calibrate_weights(B: int = 32, backend: str | None = None, *,
+                      feedback: bool = True) -> tuple:
     """(w_solve, w_tile_mem, w_tile_flop) for B×B tiles on ``backend``,
-    normalized to w_solve = 1. Cached per (B, backend)."""
+    normalized to w_solve = 1.
+
+    The wall-clock feedback loop takes precedence: when the calibration
+    store (:mod:`repro.obs.calibration`) holds enough measured probe-solve
+    samples for this (backend, B) to fit trustworthy weights, those fitted
+    weights are returned — a ``probe_solves=0`` session inherits timings a
+    prior probed session persisted. Otherwise (or with ``feedback=False``)
+    the HLO-derived estimate below is used. Both paths return a stable cached
+    tuple per (B, backend) until new samples arrive.
+    """
+    if feedback:
+        from repro.obs.calibration import fitted_weights
+
+        w = fitted_weights(B, backend)
+        if w is not None:
+            return w
+    return hlo_weights(B, backend)
+
+
+@functools.lru_cache(maxsize=None)
+def hlo_weights(B: int = 32, backend: str | None = None) -> tuple:
+    """The pure HLO-derived weight estimate (no measured feedback), cached
+    per (B, backend)."""
     kb = ops.op_backend(backend)
     diag = jnp.eye(B, dtype=jnp.float32)[None]
     vec = jnp.ones((1, B), jnp.float32)

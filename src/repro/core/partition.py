@@ -156,6 +156,25 @@ def make_partition(
     """``cost_weights``/``cost_R`` feed the malleable strategy's cost model
     (calibrated TRSV:GEMV weights and the expected RHS panel width); the
     row-count strategies ignore them."""
+    from repro.obs.trace import get_tracer
+
+    with get_tracer().span("sptrsv.partition", strategy=strategy,
+                           n_devices=n_devices, nb=bs.nb) as span:
+        part = _make_partition(bs, n_devices, strategy, tasks_per_device,
+                               cost_weights=cost_weights, cost_R=cost_R)
+        span.set(boundary_rows=int(part.boundary.sum()))
+    return part
+
+
+def _make_partition(
+    bs: BlockStructure,
+    n_devices: int,
+    strategy: str = "taskpool",
+    tasks_per_device: int = 8,
+    *,
+    cost_weights: tuple | None = None,
+    cost_R: int = 1,
+) -> Partition:
     nb = bs.nb
     if strategy == "contiguous":
         per = -(-nb // n_devices)

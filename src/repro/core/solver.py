@@ -51,6 +51,7 @@ from repro import compat
 from repro.core.blocking import BlockStructure, build_blocks, refresh_block_values
 from repro.core.partition import STRATEGIES, Partition, make_partition
 from repro.kernels import ops
+from repro.obs.trace import get_tracer
 from repro.sparse.matrix import CSR, reverse_transpose
 from repro.kernels.superstep import superstep_call
 
@@ -230,6 +231,19 @@ def build_plan(
     """``part`` reuses an existing partition computed for the same sparsity
     (e.g. a zero-fill factor shares its matrix's pattern, so one partition
     serves both plans). Not applicable to transpose plans (reversed order)."""
+    with get_tracer().span("sptrsv.schedule", n_devices=n_devices,
+                           sched=config.sched, comm=config.comm,
+                           transpose=transpose) as span:
+        plan = _build_plan(a, n_devices, config, transpose=transpose, part=part)
+        span.set(n_levels=plan.n_levels, n_buckets=len(plan.buckets),
+                 comm_bytes_per_solve=plan.comm_bytes_per_solve)
+    return plan
+
+
+def _build_plan(
+    a: CSR, n_devices: int, config: SolverConfig = SolverConfig(),
+    *, transpose: bool = False, part: Partition | None = None,
+) -> Plan:
     if transpose:
         # Solve a^T x = b with the forward-substitution machinery: reverse row
         # and column order of a^T, which is lower-triangular again; rhs/solution
@@ -343,15 +357,17 @@ def refresh_plan(plan: Plan, a: CSR) -> Plan:
     pattern would produce. Transpose plans refresh through the same row/column
     reversal they were built with.
     """
-    if plan.transpose:
-        a = reverse_transpose(a)
-    bs = refresh_block_values(plan.bs, a)
-    B, D = bs.B, plan.n_devices
-    diag = np.concatenate([bs.diag, np.eye(B, dtype=np.float32)[None]], axis=0)
-    tiles = np.zeros_like(plan.tiles)
-    for d, ids in enumerate(_tiles_by_device(bs, plan.part, D)):
-        tiles[d, : ids.shape[0]] = bs.off_tiles[ids]
-    return dataclasses.replace(plan, bs=bs, diag=diag, tiles=tiles)
+    with get_tracer().span("sptrsv.refresh", transpose=plan.transpose,
+                           n_devices=plan.n_devices):
+        if plan.transpose:
+            a = reverse_transpose(a)
+        bs = refresh_block_values(plan.bs, a)
+        B, D = bs.B, plan.n_devices
+        diag = np.concatenate([bs.diag, np.eye(B, dtype=np.float32)[None]], axis=0)
+        tiles = np.zeros_like(plan.tiles)
+        for d, ids in enumerate(_tiles_by_device(bs, plan.part, D)):
+            tiles[d, : ids.shape[0]] = bs.off_tiles[ids]
+        return dataclasses.replace(plan, bs=bs, diag=diag, tiles=tiles)
 
 
 # ---------------------------------------------------------------------------
@@ -386,30 +402,37 @@ def _compact_level_body(
                 acc, delta, x = carry
             else:
                 acc, x = carry
+            # named_scope annotations are metadata-only (always present in the
+            # traced program) so profiles line up with the host-side spans and
+            # toggling tracing can never retrace a compiled executor
             if ex is not None and w_e > 0:
-                # lazy exactly-once pull: combine partial accumulators for the
-                # boundary rows of THIS level right before solving them
-                rows = jax.lax.dynamic_slice(ex, (off[t, 2],), (w_e,))
-                acc = acc.at[rows].set(jax.lax.psum(acc[rows], AXIS))
+                with jax.named_scope("sptrsv.exchange"):
+                    # lazy exactly-once pull: combine partial accumulators for
+                    # the boundary rows of THIS level right before solving them
+                    rows = jax.lax.dynamic_slice(ex, (off[t, 2],), (w_e,))
+                    acc = acc.at[rows].set(jax.lax.psum(acc[rows], AXIS))
             if w_s > 0:
-                rows = jax.lax.dynamic_slice(sr, (off[t, 0],), (w_s,))
-                safe = jnp.where(rows < 0, nb, rows)
-                xs = ops.batched_block_trsv(
-                    diag[safe], b_pad[safe] - acc[safe], backend=cfg.kernel_backend
-                )
-                x = x.at[safe].set(
-                    jnp.where(ops.bcast_trailing(rows >= 0, xs), xs, x[safe])
-                )
+                with jax.named_scope("sptrsv.level_solve"):
+                    rows = jax.lax.dynamic_slice(sr, (off[t, 0],), (w_s,))
+                    safe = jnp.where(rows < 0, nb, rows)
+                    xs = ops.batched_block_trsv(
+                        diag[safe], b_pad[safe] - acc[safe],
+                        backend=cfg.kernel_backend
+                    )
+                    x = x.at[safe].set(
+                        jnp.where(ops.bcast_trailing(rows >= 0, xs), xs, x[safe])
+                    )
             if w_u > 0:
-                tids = jax.lax.dynamic_slice(ut, (off[t, 1],), (w_u,))
-                prods = ops.batched_block_gemv(
-                    tiles[tids], x[tcol[tids]], backend=cfg.kernel_backend,
-                    group=cfg.gemv_group,
-                )
-                if split_delta:
-                    delta = delta.at[trow[tids]].add(prods)
-                else:
-                    acc = acc.at[trow[tids]].add(prods)
+                with jax.named_scope("sptrsv.tile_update"):
+                    tids = jax.lax.dynamic_slice(ut, (off[t, 1],), (w_u,))
+                    prods = ops.batched_block_gemv(
+                        tiles[tids], x[tcol[tids]], backend=cfg.kernel_backend,
+                        group=cfg.gemv_group,
+                    )
+                    if split_delta:
+                        delta = delta.at[trow[tids]].add(prods)
+                    else:
+                        acc = acc.at[trow[tids]].add(prods)
             return (acc, delta, x) if split_delta else (acc, x)
 
         return branch
@@ -655,32 +678,37 @@ def _fused_levelset_device_fn(plan: Plan):
         def body(s, carry):
             if unified:
                 acc, delta, x = carry
-                acc = acc + jax.lax.psum(delta, AXIS)
-                delta = jnp.zeros_like(delta)
-                return superstep_call(
-                    seg_a[s], off_a, wid_a, sr, ut, trow, tcol, diag, tiles,
-                    b_pad, acc, x, delta, grid=grid, split_delta=True,
-                    interpret=interp, stream=streamed,
-                    solve_widths=sw, upd_widths=uw,
-                )
+                with jax.named_scope("sptrsv.exchange"):
+                    acc = acc + jax.lax.psum(delta, AXIS)
+                    delta = jnp.zeros_like(delta)
+                with jax.named_scope("sptrsv.superstep"):
+                    return superstep_call(
+                        seg_a[s], off_a, wid_a, sr, ut, trow, tcol, diag, tiles,
+                        b_pad, acc, x, delta, grid=grid, split_delta=True,
+                        interpret=interp, stream=streamed,
+                        solve_widths=sw, upd_widths=uw,
+                    )
             acc, x = carry
             if has_ex:
-                if len(ex_branches) == 1:
-                    acc = ex_branches[0](s, acc)
-                else:
-                    acc = jax.lax.switch(ex_sel_a[s], ex_branches, s, acc)
-            return superstep_call(
-                seg_a[s], off_a, wid_a, sr, ut, trow, tcol, diag, tiles,
-                b_pad, acc, x, grid=grid, interpret=interp, stream=streamed,
-                solve_widths=sw, upd_widths=uw,
-            )
+                with jax.named_scope("sptrsv.exchange"):
+                    if len(ex_branches) == 1:
+                        acc = ex_branches[0](s, acc)
+                    else:
+                        acc = jax.lax.switch(ex_sel_a[s], ex_branches, s, acc)
+            with jax.named_scope("sptrsv.superstep"):
+                return superstep_call(
+                    seg_a[s], off_a, wid_a, sr, ut, trow, tcol, diag, tiles,
+                    b_pad, acc, x, grid=grid, interpret=interp, stream=streamed,
+                    solve_widths=sw, upd_widths=uw,
+                )
 
         init = (z, z, z) if unified else (z, z)
         carry = jax.lax.fori_loop(0, n_seg, body, init)
         x = carry[-1]
-        xg = x * ops.bcast_trailing(owner_mask, x)
-        if D > 1:
-            xg = jax.lax.psum(xg, AXIS)
+        with jax.named_scope("sptrsv.gather"):
+            xg = x * ops.bcast_trailing(owner_mask, x)
+            if D > 1:
+                xg = jax.lax.psum(xg, AXIS)
         return xg[:nb]
 
     return fn
@@ -750,9 +778,10 @@ def _levelset_device_fn(plan: Plan):
         )
         acc0 = jnp.zeros_like(b_pad)
         _, x = jax.lax.fori_loop(0, T, body, (acc0, acc0))
-        xg = x * ops.bcast_trailing(owner_mask, x)
-        if plan.n_devices > 1:
-            xg = jax.lax.psum(xg, AXIS)
+        with jax.named_scope("sptrsv.gather"):
+            xg = x * ops.bcast_trailing(owner_mask, x)
+            if plan.n_devices > 1:
+                xg = jax.lax.psum(xg, AXIS)
         return xg[:nb]
 
     return fn
@@ -774,13 +803,15 @@ def _levelset_unified_device_fn(plan: Plan):
             acc_red, delta, x = carry
             # dense exchange of everything accumulated since the last level —
             # the page-bouncing s.left_sum traffic of Alg. 2.
-            acc_red = acc_red + jax.lax.psum(delta, AXIS)
-            delta = jnp.zeros_like(delta)
+            with jax.named_scope("sptrsv.exchange"):
+                acc_red = acc_red + jax.lax.psum(delta, AXIS)
+                delta = jnp.zeros_like(delta)
             return step(t, (acc_red, delta, x))
 
         z = jnp.zeros_like(b_pad)
         _, _, x = jax.lax.fori_loop(0, T, body, (z, z, z))
-        return jax.lax.psum(x * ops.bcast_trailing(owner_mask, x), AXIS)[:nb]
+        with jax.named_scope("sptrsv.gather"):
+            return jax.lax.psum(x * ops.bcast_trailing(owner_mask, x), AXIS)[:nb]
 
     return fn
 
@@ -894,12 +925,13 @@ def _syncfree_device_fn(plan: Plan, frontier: bool = False):
             )
             if frontier:
                 # 2. compact the frontier, solve at its bucket width
-                order = jnp.sort(jnp.where(ready, iota_l, MLR).astype(jnp.int32))
-                sel = jnp.sum((lad_s_a < jnp.sum(ready)).astype(jnp.int32))
-                if len(solve_branches) == 1:
-                    x = solve_branches[0](order, acc_red, x)
-                else:
-                    x = jax.lax.switch(sel, solve_branches, order, acc_red, x)
+                with jax.named_scope("sptrsv.level_solve"):
+                    order = jnp.sort(jnp.where(ready, iota_l, MLR).astype(jnp.int32))
+                    sel = jnp.sum((lad_s_a < jnp.sum(ready)).astype(jnp.int32))
+                    if len(solve_branches) == 1:
+                        x = solve_branches[0](order, acc_red, x)
+                    else:
+                        x = jax.lax.switch(sel, solve_branches, order, acc_red, x)
                 solved = solved.at[lr].set(jnp.logical_or(solved[lr], ready))
                 # 3. compact the tiles sourced at this frontier, update at width
                 just = jnp.zeros((nb + 1,), jnp.bool_).at[lr].set(ready)
@@ -915,10 +947,12 @@ def _syncfree_device_fn(plan: Plan, frontier: bool = False):
                         cnt_red, dcnt)
             else:
                 # 2. solve the frontier (masked dense over local rows)
-                xs = ops.batched_block_trsv(
-                    ldiag, lb - acc_red[lr], backend=cfg.kernel_backend
-                )
-                x = x.at[lr].set(jnp.where(ops.bcast_trailing(ready, xs), xs, x[lr]))
+                with jax.named_scope("sptrsv.level_solve"):
+                    xs = ops.batched_block_trsv(
+                        ldiag, lb - acc_red[lr], backend=cfg.kernel_backend
+                    )
+                    x = x.at[lr].set(
+                        jnp.where(ops.bcast_trailing(ready, xs), xs, x[lr]))
                 solved = solved.at[lr].set(jnp.logical_or(solved[lr], ready))
                 # 3. updates from tiles whose source column solved THIS superstep
                 just = jnp.zeros((nb + 1,), jnp.bool_).at[lr].set(ready)
@@ -941,18 +975,19 @@ def _syncfree_device_fn(plan: Plan, frontier: bool = False):
                     cnt_red = cnt_red.at[trow].add(cm)
             # 4. exchange remote contributions
             if multi and (has_ex or not zerocopy):
-                if has_ex:  # packed boundary rows only
-                    red = jax.lax.psum(delta[exb], AXIS)
-                    redc = jax.lax.psum(dcnt[exb], AXIS)
-                    acc_red = acc_red.at[exb].add(red)
-                    cnt_red = cnt_red.at[exb].add(redc)
-                    delta = delta.at[exb].set(0.0)
-                    dcnt = dcnt.at[exb].set(0)
-                else:  # unified: dense all-reduce of values and counters
-                    acc_red = acc_red + jax.lax.psum(delta, AXIS)
-                    cnt_red = cnt_red + jax.lax.psum(dcnt, AXIS)
-                    delta = jnp.zeros_like(delta)
-                    dcnt = jnp.zeros_like(dcnt)
+                with jax.named_scope("sptrsv.exchange"):
+                    if has_ex:  # packed boundary rows only
+                        red = jax.lax.psum(delta[exb], AXIS)
+                        redc = jax.lax.psum(dcnt[exb], AXIS)
+                        acc_red = acc_red.at[exb].add(red)
+                        cnt_red = cnt_red.at[exb].add(redc)
+                        delta = delta.at[exb].set(0.0)
+                        dcnt = dcnt.at[exb].set(0)
+                    else:  # unified: dense all-reduce of values and counters
+                        acc_red = acc_red + jax.lax.psum(delta, AXIS)
+                        cnt_red = cnt_red + jax.lax.psum(dcnt, AXIS)
+                        delta = jnp.zeros_like(delta)
+                        dcnt = jnp.zeros_like(dcnt)
             # 5. global termination check
             remaining = jnp.sum(jnp.logical_and(lown, jnp.logical_not(solved[lr])))
             if multi:
@@ -970,9 +1005,10 @@ def _syncfree_device_fn(plan: Plan, frontier: bool = False):
             done=jnp.asarray(False),
         )
         state = jax.lax.while_loop(cond, body, state)
-        xg = state["x"] * ops.bcast_trailing(owner_mask, state["x"])
-        if multi:
-            xg = jax.lax.psum(xg, AXIS)
+        with jax.named_scope("sptrsv.gather"):
+            xg = state["x"] * ops.bcast_trailing(owner_mask, state["x"])
+            if multi:
+                xg = jax.lax.psum(xg, AXIS)
         return xg[:nb]
 
     return fn

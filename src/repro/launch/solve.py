@@ -10,6 +10,7 @@ probe solves) pick the execution mode.
 from __future__ import annotations
 
 import argparse
+import os
 
 import jax
 import numpy as np
@@ -20,6 +21,7 @@ from repro.core import cut_stats, metrics
 from repro.core import partition as partition_strategies
 from repro.core.analysis import level_sets
 from repro.kernels import ops
+from repro.obs import trace as obs_trace
 from repro.sparse import suite
 from repro.sparse.matrix import reference_solve
 
@@ -55,7 +57,13 @@ def main() -> None:
                     help="expected RHS panel width fed to the partition cost model")
     ap.add_argument("--calibrate-cost", action="store_true",
                     help="calibrate malleable cost weights via hlo_cost")
+    ap.add_argument("--trace", default=os.environ.get(obs_trace.ENV_TRACE),
+                    metavar="PATH.jsonl",
+                    help="write lifecycle spans + a final metrics snapshot "
+                         "to this JSONL file (default: env REPRO_TRACE)")
     args = ap.parse_args()
+    if args.trace:
+        obs_trace.configure_tracing(args.trace)
 
     if args.matrix == "random":
         a = suite.random_levelled(args.n, args.levels, 4.0, seed=0)
@@ -116,6 +124,16 @@ def main() -> None:
     st = ctx.stats()
     print(f"[solve] {dt*1e3:.2f} ms/solve over {args.repeats} runs, rel.err {err:.2e} "
           f"(cache hit rate {st['cache_hit_rate']:.0%})")
+    tracer = obs_trace.get_tracer()
+    if tracer.enabled:
+        # close the trace with one metrics line: plan-static gauges + the
+        # session's runtime counters and per-solve wall-clock histogram
+        snap = ctx.metrics_snapshot(handle)
+        tracer.write({"type": "metrics", "metrics": snap})
+        names = sorted({r["name"] for r in tracer.export() if r.get("type") == "span"})
+        print(f"[solve] trace: {len(tracer.export())} records -> {tracer.path} "
+              f"(spans: {', '.join(names)})")
+        tracer.close()
 
 
 if __name__ == "__main__":

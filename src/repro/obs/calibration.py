@@ -1,0 +1,253 @@
+"""Wall-clock calibration feedback loop (ISSUE 6 tentpole, part c).
+
+The auto-tuner's probe solves are real wall-clock samples of the cost model's
+compute term — this module gives them a durable home and feeds them back into
+:func:`repro.core.costmodel.calibrate_weights`, closing the ROADMAP's
+"wall-clock calibration feedback loop": a session with ``probe_solves=0``
+inherits weights *fitted from earlier measured runs* instead of pure
+``hlo_cost`` estimates.
+
+Model
+-----
+One measured solve of a plan at RHS width R costs, in the block-op model,
+
+    us  ~=  c0  +  c_solve * su  +  c_mem * tu  +  c_flop * tf
+
+where ``(su, tu, tf) = (sum(ws)*R, sum(wu), sum(wu)*R)`` are the plan's
+schedule work units (:func:`repro.api.autotune.plan_work_units`) and ``c0``
+is a fixed per-solve dispatch overhead — on CPU a few hundred microseconds
+that would otherwise be smeared into (and often overwhelm) the marginal
+coefficients. The intercept is fitted and discarded: it is identical for
+every candidate of a given solve, so it cancels in plan ranking. Each probe
+records one sample keyed by ``(backend, B)`` and deduplicated by the plan's
+*bucket-width signature* (re-probing the same schedule replaces its sample
+rather than double-weighting it). Fitting:
+
+* samples spanning >= 2 distinct R and a full-rank system fit all three
+  marginal coefficients directly;
+* the common uniform-R case collapses ``tu``/``tf`` into one tile column
+  (they are collinear); the fitted total tile cost is split into its mem/flop
+  parts by the hlo-calibrated ratio at the samples' mean R — measured totals,
+  HLO-shaped split;
+* when the sample set mixes schedulers whose work units price differently
+  (syncfree counts speculative sweep revisits that levelset never executes),
+  the pooled fit can violate the sign guards; the fitter then retries per
+  sched group — largest group first — and returns the first trustworthy fit;
+* under-determined or ill-conditioned sample sets (< 2 samples, rank-
+  deficient regressors, non-positive solve coefficient) return ``None`` and
+  the caller falls back to the pure HLO weights — calibration can only
+  degrade gracefully, never produce nonsense.
+
+Fitted weights are normalized to ``w_solve = 1`` like the HLO weights they
+replace, so they drop into ``block_row_cost`` / ``estimate_plan_cost``
+unchanged.
+
+Persistence: ``CalibrationStore(path=...)`` saves after every ``record`` and
+loads on construction; env ``REPRO_CALIBRATION=weights.json`` makes the
+process-global store durable across sessions (the acceptance path: a probed
+run persists, a later ``probe_solves=0`` run picks the weights up).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import threading
+
+import numpy as np
+
+ENV_CALIBRATION = "REPRO_CALIBRATION"
+
+MIN_SAMPLES = 2  # one sample cannot separate solve from tile cost
+COND_LIMIT = 1e8  # reject ill-conditioned fits (near-collinear work units)
+
+
+def probe_signature(plan, R: int = 1) -> str:
+    """Stable id of what a probe measured: sched x comm x backend x block
+    size x the plan's bucket-width schedule x RHS width. Same schedule,
+    same signature — re-probes replace the sample instead of stacking."""
+    from repro.core.solver import level_widths
+
+    cfg = plan.config
+    h = hashlib.sha1()
+    h.update(np.ascontiguousarray(level_widths(plan)).tobytes())
+    head = f"{cfg.sched}/{cfg.comm}/{cfg.kernel_backend or 'default'}"
+    return f"{head}/B{plan.bs.B}/R{int(R)}/{h.hexdigest()[:12]}"
+
+
+class CalibrationStore:
+    """Measured (work-units -> wall-clock) samples per (backend, B), with
+    least-squares weight fitting and JSON persistence."""
+
+    def __init__(self, path: str | None = None):
+        self.path = path
+        self._samples: dict[str, dict] = {}  # "backend/B##" -> {sig: sample}
+        self._fits: dict[str, tuple | None] = {}
+        self._lock = threading.Lock()
+        if path and os.path.exists(path):
+            self.load(path)
+
+    @staticmethod
+    def _key(backend: str, B: int) -> str:
+        return f"{backend}/B{int(B)}"
+
+    def record(self, *, backend: str, B: int, signature: str,
+               solve_units: float, tile_units: float, tile_flop_units: float,
+               R: int, measured_us: float) -> None:
+        """Install one measured sample (replacing any prior sample with the
+        same signature) and persist when the store has a path."""
+        sample = {
+            "su": float(solve_units), "tu": float(tile_units),
+            "tf": float(tile_flop_units), "R": int(R),
+            "us": float(measured_us),
+        }
+        with self._lock:
+            self._samples.setdefault(self._key(backend, B), {})[signature] = sample
+            self._fits.pop(self._key(backend, B), None)
+        if self.path:
+            self.save(self.path)
+
+    def samples(self, backend: str, B: int) -> dict:
+        with self._lock:
+            return dict(self._samples.get(self._key(backend, B), {}))
+
+    def n_samples(self) -> int:
+        with self._lock:
+            return sum(len(v) for v in self._samples.values())
+
+    # -- fitting ----------------------------------------------------------
+
+    def fitted_weights(self, B: int, backend: str) -> tuple | None:
+        """``(1.0, w_tile_mem, w_tile_flop)`` fitted from this store's
+        measured samples for ``(backend, B)``, or ``None`` when the samples
+        cannot support a trustworthy fit. Cached per key until new samples
+        arrive, so repeat calls return the identical tuple."""
+        key = self._key(backend, B)
+        with self._lock:
+            if key in self._fits:
+                return self._fits[key]
+            samples = dict(self._samples.get(key, {}))
+        fit = _fit_weights(samples, B, backend)
+        with self._lock:
+            self._fits[key] = fit
+        return fit
+
+    # -- persistence ------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        with self._lock:
+            blob = {"version": 1, "samples": self._samples}
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(blob, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)  # atomic: concurrent readers see old or new
+
+    def load(self, path: str) -> None:
+        with open(path) as f:
+            blob = json.load(f)
+        if blob.get("version") != 1:
+            raise ValueError(f"unknown calibration file version in {path!r}")
+        with self._lock:
+            self._samples = {k: dict(v) for k, v in blob["samples"].items()}
+            self._fits.clear()
+
+
+def _fit_weights(samples: dict, B: int, backend: str) -> tuple | None:
+    """Fit ``{signature: sample}``; pooled first, per-sched groups on guard
+    failure (heterogeneous schedulers price a work unit differently)."""
+    fit = _fit_sample_set(list(samples.values()), B, backend)
+    if fit is not None:
+        return fit
+    groups: dict[str, list] = {}
+    for sig, s in samples.items():
+        groups.setdefault(sig.split("/", 1)[0], []).append(s)
+    for _, grp in sorted(groups.items(), key=lambda kv: (-len(kv[1]), kv[0])):
+        if len(grp) < len(samples):
+            fit = _fit_sample_set(grp, B, backend)
+            if fit is not None:
+                return fit
+    return None
+
+
+def _fit_sample_set(samples: list, B: int, backend: str) -> tuple | None:
+    if len(samples) < MIN_SAMPLES:
+        return None
+    su = np.array([s["su"] for s in samples], dtype=np.float64)
+    tu = np.array([s["tu"] for s in samples], dtype=np.float64)
+    tf = np.array([s["tf"] for s in samples], dtype=np.float64)
+    us = np.array([s["us"] for s in samples], dtype=np.float64)
+    if not (np.all(np.isfinite(us)) and np.all(us > 0) and np.all(su > 0)):
+        return None
+
+    if len(samples) >= 3 and len({s["R"] for s in samples}) >= 2:
+        w = _solve_affine(np.stack([su, tu, tf], axis=1), us)
+        if w is not None and w[0] > 0 and w[1] >= 0 and w[2] >= 0:
+            return (1.0, float(w[1] / w[0]), float(w[2] / w[0]))
+
+    # uniform-R (or rank-deficient) path: tu and tf are collinear, so fit the
+    # total tile coefficient and split it by the HLO-calibrated ratio
+    w = _solve_affine(np.stack([su, tu], axis=1), us)
+    if w is None or w[0] <= 0 or w[1] < 0:
+        return None
+    c_tile = float(w[1] / w[0])  # w_tile_mem + w_tile_flop*mean R, w_solve-normed
+    r_mean = float(np.mean([s["R"] for s in samples]))
+    from repro.core.costmodel import hlo_weights
+
+    _, hm, hf = hlo_weights(B, backend=backend)
+    denom = hm + hf * r_mean
+    if denom <= 0:
+        return (1.0, c_tile, 0.0)  # HLO says tiles are free: keep it all mem-side
+    return (1.0, c_tile * hm / denom, c_tile * hf / denom)
+
+
+def _solve_affine(A: np.ndarray, y: np.ndarray) -> np.ndarray | None:
+    """Least squares with an intercept column absorbing the fixed per-solve
+    dispatch overhead; the intercept is dropped from the returned vector.
+    Falls back to the homogeneous fit when rows cannot support an intercept."""
+    ones = np.ones((A.shape[0], 1), dtype=np.float64)
+    w = _solve_ls(np.concatenate([ones, A], axis=1), y)
+    if w is not None:
+        return w[1:]
+    return _solve_ls(A, y)
+
+
+def _solve_ls(A: np.ndarray, y: np.ndarray) -> np.ndarray | None:
+    """Least squares with rank/conditioning guards; None when untrustworthy."""
+    if A.shape[0] < A.shape[1]:
+        return None
+    if np.linalg.matrix_rank(A) < A.shape[1]:
+        return None
+    if np.linalg.cond(A) > COND_LIMIT:
+        return None
+    w, *_ = np.linalg.lstsq(A, y, rcond=None)
+    if not np.all(np.isfinite(w)):
+        return None
+    return w
+
+
+# -- global store ----------------------------------------------------------
+
+_store: CalibrationStore | None = None
+
+
+def get_store() -> CalibrationStore:
+    """The process-global store; durable when env ``REPRO_CALIBRATION`` names
+    a file (loaded on first access, saved after every recorded probe)."""
+    global _store
+    if _store is None:
+        _store = CalibrationStore(path=os.environ.get(ENV_CALIBRATION))
+    return _store
+
+
+def set_store(store: CalibrationStore | None) -> None:
+    """Swap the global store (tests; ``None`` re-reads the env on next use)."""
+    global _store
+    _store = store
+
+
+def fitted_weights(B: int, backend: str | None = None) -> tuple | None:
+    """Global-store fit for the *resolved executor* backend — the thing the
+    probes actually measured (``None``/"default" resolves per platform)."""
+    from repro.kernels import ops
+
+    return get_store().fitted_weights(B, ops.executor_backend(backend))

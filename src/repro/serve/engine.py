@@ -16,6 +16,8 @@ from repro.distributed.sharding import batch_specs, cache_specs, param_specs
 from repro.models.config import ModelConfig
 from repro.models.layers import vocab_pad_mask
 from repro.models.model import forward
+from repro.obs.metrics import get_registry
+from repro.obs.trace import get_tracer
 
 
 def _shard(mesh, spec_tree):
@@ -30,11 +32,12 @@ def make_prefill_step(cfg: ModelConfig, mesh, *, example_params=None,
     dp = _dp_axes(mesh)
 
     def prefill(params, batch, cache):
-        logits, cache = forward(
-            params, cfg, batch.get("tokens"), embeds=batch.get("embeds"),
-            cache=cache, pos_offset=0, enc_out=batch.get("enc_out"),
-            last_only=True,
-        )
+        with jax.named_scope("serve.prefill"):
+            logits, cache = forward(
+                params, cfg, batch.get("tokens"), embeds=batch.get("embeds"),
+                cache=cache, pos_offset=0, enc_out=batch.get("enc_out"),
+                last_only=True,
+            )
         return logits, cache
 
     if example_params is None:
@@ -50,9 +53,11 @@ def make_prefill_step(cfg: ModelConfig, mesh, *, example_params=None,
     )
 
     def stepper(params, batch, cache):
-        return jitted(jax.device_put(params, pspecs),
-                      jax.device_put(batch, bspecs),
-                      jax.device_put(cache, cspecs))
+        with get_tracer().span("serve.prefill"):
+            get_registry().counter("serve.prefills").inc()
+            return jitted(jax.device_put(params, pspecs),
+                          jax.device_put(batch, bspecs),
+                          jax.device_put(cache, cspecs))
 
     return stepper
 
@@ -63,12 +68,13 @@ def make_decode_step(cfg: ModelConfig, mesh, *, example_params=None,
     dp = _dp_axes(mesh)
 
     def decode(params, batch, cache, pos):
-        logits, cache = forward(
-            params, cfg, batch.get("tokens"), embeds=batch.get("embeds"),
-            cache=cache, pos_offset=pos,
-        )
-        logits = vocab_pad_mask(logits[:, -1].astype(jnp.float32), cfg.vocab)
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        with jax.named_scope("serve.decode"):
+            logits, cache = forward(
+                params, cfg, batch.get("tokens"), embeds=batch.get("embeds"),
+                cache=cache, pos_offset=pos,
+            )
+            logits = vocab_pad_mask(logits[:, -1].astype(jnp.float32), cfg.vocab)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tok, cache
 
     if example_params is None:
@@ -84,8 +90,10 @@ def make_decode_step(cfg: ModelConfig, mesh, *, example_params=None,
     )
 
     def stepper(params, batch, cache, pos):
-        return jitted(jax.device_put(params, pspecs),
-                      jax.device_put(batch, bspecs),
-                      jax.device_put(cache, cspecs), pos)
+        with get_tracer().span("serve.decode", pos=int(pos)):
+            get_registry().counter("serve.decodes").inc()
+            return jitted(jax.device_put(params, pspecs),
+                          jax.device_put(batch, bspecs),
+                          jax.device_put(cache, cspecs), pos)
 
     return stepper

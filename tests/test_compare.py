@@ -3,7 +3,15 @@ import json
 
 import pytest
 
-from benchmarks.compare import compare, compare_fused, fused_ratios, main
+from benchmarks.compare import (
+    compare,
+    compare_fused,
+    fused_ratios,
+    load_provenance,
+    load_rows,
+    main,
+    provenance_note,
+)
 
 
 def rows(**kv):
@@ -62,6 +70,45 @@ def test_fused_gate_regression():
     assert [m for m, _, _ in regs] == ["dc2"]
     base, ratio = regs[0][1], regs[0][2]
     assert base == pytest.approx(1.6) and ratio == pytest.approx(2.6)
+
+
+def test_metadata_keys_excluded_from_gating(tmp_path):
+    p = tmp_path / "bench.json"
+    p.write_text(json.dumps({
+        "a": {"us_per_call": 100.0, "derived": ""},
+        "_provenance": {"jax_version": "0.4.37", "device_count": 1},
+        "_metrics": {"session.solves": 3},
+    }))
+    assert load_rows(str(p)) == {"a": 100.0}
+    assert load_provenance(str(p))["jax_version"] == "0.4.37"
+    # pre-provenance bench files (older artifacts) load cleanly too
+    q = tmp_path / "old.json"
+    q.write_text(json.dumps({"a": {"us_per_call": 90.0}}))
+    assert load_rows(str(q)) == {"a": 90.0}
+    assert load_provenance(str(q)) == {}
+
+
+def test_provenance_note_surfaces_drift(tmp_path):
+    def dump(name, prov):
+        p = tmp_path / name
+        p.write_text(json.dumps({"a": {"us_per_call": 100.0},
+                                 "_provenance": prov}))
+        return str(p)
+
+    old = dump("old.json", {"jax_version": "0.4.37", "device_count": 4,
+                            "platform": "cpu"})
+    same = dump("same.json", {"jax_version": "0.4.37", "device_count": 4,
+                              "platform": "cpu"})
+    drift = dump("drift.json", {"jax_version": "0.4.38", "device_count": 8,
+                                "platform": "cpu"})
+    assert provenance_note(old, same) == ""
+    note = provenance_note(old, drift)
+    assert "jax_version" in note and "'0.4.37' -> '0.4.38'" in note
+    assert "device_count: 4 -> 8" in note
+    # either side missing provenance: no note, never an error
+    bare = tmp_path / "bare.json"
+    bare.write_text(json.dumps({"a": {"us_per_call": 100.0}}))
+    assert provenance_note(str(bare), drift) == ""
 
 
 def test_cli_window_and_exit_codes(tmp_path):
