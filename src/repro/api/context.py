@@ -327,12 +327,14 @@ class SpTRSVContext:
         if transpose:
             if handle.tplan is None:
                 handle.tplan = build_plan(handle.matrix, self.n_devices,
-                                          handle.config, transpose=True)
+                                          handle.config, transpose=True,
+                                          verify=handle.options.verify)
                 self._counters["transpose_extensions"] += 1
             return handle.tplan
         if handle.plan is None:
             handle.plan = build_plan(handle.matrix, self.n_devices,
-                                     handle.config, part=handle.part)
+                                     handle.config, part=handle.part,
+                                     verify=handle.options.verify)
         return handle.plan
 
     # -- introspection ----------------------------------------------------

@@ -76,6 +76,9 @@ class PlanOptions:
     rhs_hint: int = 1  # expected RHS panel width, feeds cost model + probes
     calibrate_cost: bool = False  # calibrate cost weights via hlo_cost
     probe_solves: int = 0  # >0: measure each auto candidate this many times
+    # static plan verification level ("basic"/"contracts"/"strict") applied to
+    # every plan this session builds; None defers to the REPRO_VERIFY env var
+    verify: str | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "sched", _coerce(Sched, self.sched, "sched", allow_auto=True))
@@ -90,6 +93,14 @@ class PlanOptions:
                          ("rhs_hint", 1), ("probe_solves", 0), ("gemv_group", 0)):
             if int(getattr(self, name)) < lo:
                 raise ValueError(f"{name} must be >= {lo}, got {getattr(self, name)}")
+        if self.verify is not None:
+            from repro.verify import LEVELS
+
+            if self.verify not in LEVELS:
+                raise ValueError(
+                    f"invalid verify: {self.verify!r} "
+                    f"(valid choices: {', '.join(LEVELS)})"
+                )
 
     @property
     def is_auto(self) -> bool:

@@ -158,6 +158,10 @@ class Plan:
         B = self.bs.B
         itemsize = 4
         if self.config.comm == "unified":
+            # an empty cut means every update is device-local: the executors
+            # skip the dense psums entirely (hb.exchange.degenerate)
+            if self.n_boundary_rows == 0:
+                return 0
             # syncfree additionally psums the per-row in-degree counters each
             # superstep (Alg. 2's s.left_sum AND the dependency counters).
             width = B if self.config.sched == "levelset" else B + 1
@@ -227,16 +231,31 @@ def _tiles_by_device(bs: BlockStructure, part: Partition, D: int) -> list:
 def build_plan(
     a: CSR, n_devices: int, config: SolverConfig = SolverConfig(),
     *, transpose: bool = False, part: Partition | None = None,
+    verify: str | None = None,
 ) -> Plan:
     """``part`` reuses an existing partition computed for the same sparsity
     (e.g. a zero-fill factor shares its matrix's pattern, so one partition
-    serves both plans). Not applicable to transpose plans (reversed order)."""
+    serves both plans). Not applicable to transpose plans (reversed order).
+
+    ``verify`` opts into the static plan verifier (``repro.verify``) right
+    after construction: a level name (``"basic"``/``"contracts"``/
+    ``"strict"``) runs :func:`repro.verify.verify_plan` at that level and
+    raises :class:`repro.verify.PlanVerificationError` on any finding of
+    error grade (or any finding at all for ``"strict"``). ``None`` defers to
+    the ``REPRO_VERIFY`` environment variable (``1`` = strict, unset = off).
+    """
     with get_tracer().span("sptrsv.schedule", n_devices=n_devices,
                            sched=config.sched, comm=config.comm,
                            transpose=transpose) as span:
         plan = _build_plan(a, n_devices, config, transpose=transpose, part=part)
         span.set(n_levels=plan.n_levels, n_buckets=len(plan.buckets),
                  comm_bytes_per_solve=plan.comm_bytes_per_solve)
+    # late import: repro.verify walks plans, so it imports this module
+    from repro.verify import env_verify_level, verify_plan
+
+    level = env_verify_level(default=verify) if verify is None else verify
+    if level is not None:
+        verify_plan(plan, level=level).raise_if_failed()
     return plan
 
 
@@ -466,7 +485,7 @@ def fused_segments(plan: Plan) -> np.ndarray:
     if T == 0:
         return np.zeros((0, 2), dtype=np.int32)
     cfg = plan.config
-    if cfg.comm == "unified" and plan.n_devices > 1:
+    if cfg.comm == "unified" and plan.n_devices > 1 and plan.n_boundary_rows > 0:
         lo = np.arange(T, dtype=np.int32)
         return np.stack([lo, lo + 1], axis=1)
     wid = level_widths(plan)
@@ -536,7 +555,8 @@ def fused_vmem_bytes(plan: Plan, R: int = 1, *, streamed: bool = False) -> int:
     B = plan.bs.B
     itemsize = 4
     vec = (plan.bs.nb + 1) * B * max(1, R) * itemsize
-    n_carry = 3 if (plan.config.comm == "unified" and plan.n_devices > 1) else 2
+    n_carry = 3 if (plan.config.comm == "unified" and plan.n_devices > 1
+                    and plan.n_boundary_rows > 0) else 2
     vecs = (2 * n_carry + 1) * vec  # carry in + carry out windows + b_pad
     if streamed:
         if plan.n_levels:
@@ -593,7 +613,8 @@ def dispatch_stats(plan: Plan) -> dict:
     cfg = plan.config
     has_ex = (cfg.comm == "zerocopy" and plan.n_devices > 1
               and plan.n_boundary_rows > 0)
-    unified = cfg.comm == "unified" and plan.n_devices > 1
+    unified = (cfg.comm == "unified" and plan.n_devices > 1
+               and plan.n_boundary_rows > 0)
     n_ex = (int((wid[:, 2] > 0).sum()) if has_ex
             else (plan.n_levels if unified else 0))
     switch = int(2 * (wid[:, 0] > 0).sum() + 2 * (wid[:, 1] > 0).sum()) + n_ex
@@ -631,7 +652,9 @@ def _fused_levelset_device_fn(plan: Plan):
     """
     cfg = plan.config
     nb, T, D = plan.bs.nb, plan.n_levels, plan.n_devices
-    unified = cfg.comm == "unified" and D > 1
+    # both paths gate on a non-empty cut: with every update device-local the
+    # psums would only move zeros, so the whole solve fuses into one launch
+    unified = cfg.comm == "unified" and D > 1 and plan.n_boundary_rows > 0
     has_ex = cfg.comm == "zerocopy" and D > 1 and plan.n_boundary_rows > 0
     segs = fused_segments(plan)
     n_seg = max(1, len(segs))
@@ -845,9 +868,12 @@ def _syncfree_device_fn(plan: Plan, frontier: bool = False):
     nb, B = plan.bs.nb, plan.bs.B
     zerocopy = cfg.comm == "zerocopy"
     multi = plan.n_devices > 1
-    # with no boundary rows every tile's contribution is device-local, so the
-    # packed exchange would psum only the [nb] sentinel slot — skip it entirely
+    # with no boundary rows every tile's contribution is device-local, so any
+    # exchange (packed psum of the [nb] sentinel, or unified's dense
+    # all-reduce of all-zero deltas) would move no information — skip it and
+    # the delta/dcnt split entirely
     has_ex = zerocopy and multi and plan.n_boundary_rows > 0
+    needs_ex = multi and plan.n_boundary_rows > 0
     MLR = plan.local_rows.shape[1]
     MLT = plan.tiles.shape[1]  # ML + 1 (pad slot holds the zero tile, dest nb)
     lad_s = _frontier_ladder(min(plan.frontier_caps[0], MLR))
@@ -894,7 +920,7 @@ def _syncfree_device_fn(plan: Plan, frontier: bool = False):
                 )
                 pm = jnp.where(ops.bcast_trailing(valid, prods), prods, 0.0)
                 cm = valid.astype(jnp.int32)
-                if multi and (has_ex or not zerocopy):
+                if needs_ex:
                     dm = ops.bcast_trailing(dmine, pm)
                     acc_red = acc_red.at[rd].add(jnp.where(dm, pm, 0.0))
                     cnt_red = cnt_red.at[rd].add(jnp.where(dmine, cm, 0))
@@ -962,7 +988,7 @@ def _syncfree_device_fn(plan: Plan, frontier: bool = False):
                 )
                 pm = jnp.where(ops.bcast_trailing(tmask, prods), prods, 0.0)
                 cm = tmask.astype(jnp.int32)
-                if multi and (has_ex or not zerocopy):
+                if needs_ex:
                     dm = ops.bcast_trailing(dest_mine, pm)
                     acc_red = acc_red.at[trow].add(jnp.where(dm, pm, 0.0))
                     cnt_red = cnt_red.at[trow].add(jnp.where(dest_mine, cm, 0))
@@ -974,7 +1000,7 @@ def _syncfree_device_fn(plan: Plan, frontier: bool = False):
                     acc_red = acc_red.at[trow].add(pm)
                     cnt_red = cnt_red.at[trow].add(cm)
             # 4. exchange remote contributions
-            if multi and (has_ex or not zerocopy):
+            if needs_ex:
                 with jax.named_scope("sptrsv.exchange"):
                     if has_ex:  # packed boundary rows only
                         red = jax.lax.psum(delta[exb], AXIS)
@@ -1042,9 +1068,12 @@ class DistributedSolver:
             if backend in ops.FUSED_BACKENDS:
                 fn = _fused_levelset_device_fn(plan)
             else:
+                # unified with an empty cut degrades to the exchange-free
+                # executor: the dense per-level psums would only move zeros
                 fn = (
                     _levelset_device_fn(plan)
                     if plan.config.comm == "zerocopy" or D == 1
+                    or plan.n_boundary_rows == 0
                     else _levelset_unified_device_fn(plan)
                 )
             # streaming swaps the replicated diag for the per-device

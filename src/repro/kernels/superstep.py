@@ -82,6 +82,19 @@ N_PREFETCH = 7  # seg, off, wid, sr, ut, trow, tcol
 LAST_STREAM_ALLOC: dict = {}
 
 
+def stream_scratch_shapes(solve_widths: tuple, upd_widths: tuple, B: int
+                          ) -> tuple[tuple, tuple]:
+    """The streaming kernel's VMEM scratch allocation rule: double-buffered
+    slices sized by the widest entry of each DMA ladder (``(2, W, B, B)`` per
+    store, never the total store size). This is the single source shared by
+    :func:`superstep_call` and the static plan verifier
+    (``repro.verify.contracts``), so the lint checks the allocation the kernel
+    actually performs rather than a re-derivation of it."""
+    WS = max([w for w in solve_widths if w > 0] or [1])
+    WU = max([w for w in upd_widths if w > 0] or [1])
+    return (2, WS, B, B), (2, WU, B, B)
+
+
 def _solve_tile(L, rhs):
     """(B,B) lower-triangular solve of one rhs vector (B,).
 
@@ -286,18 +299,17 @@ def superstep_call(
     scratch_shapes = []
     if stream:
         B = diag.shape[-1]
-        WS = max([w for w in solve_widths if w > 0] or [1])
-        WU = max([w for w in upd_widths if w > 0] or [1])
         # the streaming contract: VMEM scratch scales with the widest level
         # slice (double-buffered), never with the total store size
+        dshape, tshape = stream_scratch_shapes(solve_widths, upd_widths, B)
         scratch_shapes = [
-            pltpu.VMEM((2, WS, B, B), diag.dtype),
-            pltpu.VMEM((2, WU, B, B), tiles.dtype),
+            pltpu.VMEM(dshape, diag.dtype),
+            pltpu.VMEM(tshape, tiles.dtype),
             pltpu.SemaphoreType.DMA((2,)),
             pltpu.SemaphoreType.DMA((2,)),
         ]
         LAST_STREAM_ALLOC.update(
-            diag_buf=(2, WS, B, B), tile_buf=(2, WU, B, B),
+            diag_buf=dshape, tile_buf=tshape,
             diag_store=tuple(diag.shape), tile_store=tuple(tiles.shape),
         )
         store_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)

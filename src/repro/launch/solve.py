@@ -57,6 +57,12 @@ def main() -> None:
                     help="expected RHS panel width fed to the partition cost model")
     ap.add_argument("--calibrate-cost", action="store_true",
                     help="calibrate malleable cost weights via hlo_cost")
+    ap.add_argument("--verify", nargs="?", const="strict", default=None,
+                    choices=["basic", "contracts", "strict"],
+                    help="statically verify the plan before solving "
+                         "(repro.verify: happens-before + kernel-contract "
+                         "lint); bare --verify means 'strict'. Exits non-zero "
+                         "on findings.")
     ap.add_argument("--trace", default=os.environ.get(obs_trace.ENV_TRACE),
                     metavar="PATH.jsonl",
                     help="write lifecycle spans + a final metrics snapshot "
@@ -85,6 +91,15 @@ def main() -> None:
     ctx = SpTRSVContext(mesh=mesh, options=opts)
     handle = ctx.analyse(a)
     plan = ctx.plan(handle)
+    if args.verify:
+        from repro.verify import verify_plan
+
+        report = verify_plan(plan, level=args.verify)
+        print(f"[solve] {report.summary()}")
+        for f in report.findings:
+            print(f"[solve]   {f}")
+        if not report.passed:
+            raise SystemExit(2)
     cs = cut_stats(plan.bs, plan.part)
     print(f"[solve] D={D} block={plan.bs.B} block-levels={plan.n_levels} "
           f"boundary={cs.boundary_fraction:.0%} comm/solve={plan.comm_bytes_per_solve/1e3:.0f}KB "

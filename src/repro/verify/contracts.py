@@ -1,0 +1,323 @@
+"""Kernel-contract lint: static invariants of the fused/streamed megakernel
+(ISSUE 7 tentpole, part 2).
+
+Where ``happens_before`` proves the *schedule* is a legal linearization of
+the dependency DAG, this module proves the *encoding* of that schedule
+matches what the kernels assume about it. Every check is against a
+re-derivation from first principles (pattern, partition, offsets) — except
+the scratch shape, which calls the kernel's own single-source allocation
+rule (:func:`repro.kernels.superstep.stream_scratch_shapes`) so the lint
+tracks the allocation the kernel actually performs.
+
+Rule catalogue (``kc.*``; all errors unless noted):
+
+* ``kc.offsets.cumsum`` — ``lvl_off`` columns are exactly the exclusive
+  cumulative sum of the per-level bucket widths (monotonicity follows).
+  ``lax.dynamic_slice`` *clamps* out-of-range offsets, so a broken offset
+  table reads wrong-but-in-bounds schedule entries — silently.
+* ``kc.flats.length`` — each flat array is exactly ``max(1, sum(widths))``
+  long (the executors' slice arithmetic assumes no tail gap).
+* ``kc.buckets.fit`` — at most ``MAX_BUCKETS`` buckets and every
+  ``lvl_bucket`` entry indexes one (the executor compiles one ``lax.switch``
+  branch per bucket).
+* ``kc.buckets.cover`` — every level's bucket width covers the rows/tiles/
+  exchanges actually scheduled at that level on the busiest device
+  (an undershooting bucket truncates the level).
+* ``kc.stream.ladder`` — the static DMA width ladders are exactly the
+  distinct per-level bucket widths: the streamed kernel predicates one
+  async-copy start *and* one wait per ladder entry on ``wid[t] == w``, so a
+  width outside the ladder moves no data and a stale ladder entry pairs a
+  start with no wait.
+* ``kc.stream.slices`` — the per-level HBM slices of the schedule-ordered
+  stores are disjoint and exactly cover ``[0, sum(widths))`` within the
+  store extent (an overlap DMAs one level's tiles into another's compute).
+* ``kc.stream.bytes`` — ``stream_dma_bytes_per_solve`` equals the schedule
+  footprint recomputed from the slices.
+* ``kc.scratch.shape`` — the double-buffered VMEM scratch is
+  ``(2, max level slice, B, B)`` per store: the kernel's allocation rule
+  evaluated on the ladders must equal the shape derived from the level table.
+* ``kc.carry.donation`` — the superstep carries are not donated:
+  ``input_output_aliases``/donation in the kernel module would let the
+  output windows alias the zero-initialized carry buffer XLA CSEs across
+  ``acc``/``x``.
+* ``kc.pad.inert`` — every pad sentinel is the inert value the kernels
+  assume: identity diagonal at the pad row, zero tile at the pad slot,
+  ``nb`` destinations, ``-1`` owner, zero in-degree.
+* ``kc.segments.partition`` — fused segments partition ``[0, T)`` in order,
+  and every level whose exchange bucket is non-empty *starts* a segment
+  (the fused executor psums only at segment starts; an exchange level in
+  mid-segment would silently skip its psum).
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from repro.verify.report import RuleSink
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard, typing only
+    from repro.core.solver import Plan
+
+
+def _widths(plan: "Plan") -> np.ndarray:
+    """(T, 3) per-level bucket widths, robust to corrupt bucket ids (flagged
+    separately by ``kc.buckets.fit``)."""
+    bid = np.clip(plan.lvl_bucket, 0, len(plan.buckets) - 1)
+    return np.asarray(plan.buckets, dtype=np.int64)[bid]
+
+
+def check_contracts(plan: "Plan", sink: RuleSink) -> None:
+    _check_offsets(plan, sink)
+    ids_ok = _check_buckets(plan, sink)
+    _check_pad_inert(plan, sink)
+    _check_donation(sink)
+    # the segment/streaming helpers index `buckets` with `lvl_bucket`
+    # unclamped (the builders guarantee validity); once kc.buckets.fit has
+    # flagged a corrupt id there is nothing sound left to derive from them
+    if plan.config.sched == "levelset" and ids_ok:
+        _check_segments(plan, sink)
+        _check_streaming(plan, sink)
+
+
+def _check_offsets(plan: "Plan", sink: RuleSink) -> None:
+    sink.check("kc.offsets.cumsum")
+    sink.check("kc.flats.length")
+    wid = _widths(plan)
+    T = plan.n_levels
+    names = ("solve", "update", "exchange")
+    flats = (plan.solve_rows.shape[1], plan.upd_tiles.shape[1],
+             plan.ex_rows.shape[0])
+    for col, name in enumerate(names):
+        w = wid[:, col] if T else np.zeros(0, np.int64)
+        expect = np.concatenate([[0], np.cumsum(w)[:-1]]) if T else w
+        got = plan.lvl_off[:, col]
+        if not np.array_equal(got, expect):
+            t = int(np.nonzero(got != expect)[0][0])
+            sink.fail(
+                "kc.offsets.cumsum",
+                f"{name} offsets are not the cumulative sum of the bucket "
+                f"widths (first mismatch: lvl_off[{t}]={int(got[t])}, "
+                f"expected {int(expect[t])})", level=t,
+            )
+        want_len = max(1, int(w.sum()))
+        if flats[col] != want_len:
+            sink.fail(
+                "kc.flats.length",
+                f"{name} flat has length {flats[col]}, schedule widths sum "
+                f"to {want_len}",
+            )
+
+
+def _check_buckets(plan: "Plan", sink: RuleSink) -> bool:
+    """Returns whether every ``lvl_bucket`` id is in range (downstream
+    checks re-derive widths through the executors' own unclamped lookups)."""
+    from repro.core.solver import MAX_BUCKETS
+
+    sink.check("kc.buckets.fit")
+    sink.check("kc.buckets.cover")
+    if len(plan.buckets) > MAX_BUCKETS:
+        sink.fail("kc.buckets.fit",
+                  f"{len(plan.buckets)} buckets exceed MAX_BUCKETS="
+                  f"{MAX_BUCKETS}")
+    bad = [t for t, b in enumerate(plan.lvl_bucket)
+           if not 0 <= int(b) < len(plan.buckets)]
+    for t in bad:
+        sink.fail("kc.buckets.fit",
+                  f"lvl_bucket[{t}]={int(plan.lvl_bucket[t])} indexes no "
+                  "bucket", level=t)
+
+    # required widths, re-derived from pattern + partition (level-set layout:
+    # level t's slice holds block-level-t rows/tiles/boundary rows)
+    bs, part, D = plan.bs, plan.part, plan.n_devices
+    T = plan.n_levels
+    if T == 0:
+        return not bad
+    lvl = np.asarray(bs.block_level, dtype=np.int64)
+    owner = np.asarray(part.owner)
+    wid = _widths(plan)
+    need = np.zeros((T, 3), dtype=np.int64)
+    for d in range(D):
+        mine = owner == d
+        if mine.any():
+            cnt = np.bincount(lvl[mine], minlength=T)[:T]
+            need[:, 0] = np.maximum(need[:, 0], cnt)
+        tmine = owner[bs.off_cols] == d
+        if tmine.any():
+            cnt = np.bincount(lvl[bs.off_cols[tmine]], minlength=T)[:T]
+            need[:, 1] = np.maximum(need[:, 1], cnt)
+    b_rows = np.nonzero(part.boundary)[0]
+    if b_rows.size:
+        need[:, 2] = np.bincount(lvl[b_rows], minlength=T)[:T]
+    names = ("solve", "update", "exchange")
+    for col, name in enumerate(names):
+        short = np.nonzero(wid[:, col] < need[:, col])[0]
+        for t in short[: 4]:
+            sink.fail(
+                "kc.buckets.cover",
+                f"level {int(t)} {name} bucket width {int(wid[t, col])} "
+                f"undershoots the {int(need[t, col])} entries scheduled "
+                "there (the slice truncates the level)", level=int(t),
+            )
+    return not bad
+
+
+def _check_pad_inert(plan: "Plan", sink: RuleSink) -> None:
+    sink.check("kc.pad.inert")
+    nb, B = plan.bs.nb, plan.bs.B
+    if not np.array_equal(plan.diag[-1], np.eye(B, dtype=plan.diag.dtype)):
+        sink.fail("kc.pad.inert",
+                  "diag pad slot is not the identity (pad solves would "
+                  "produce non-finite garbage)")
+    if plan.tiles.size and np.any(plan.tiles[:, -1] != 0):
+        sink.fail("kc.pad.inert",
+                  "tile pad slot is not the zero tile (pad updates would "
+                  "inject garbage into acc)")
+    for name, arr, want in (("owner", plan.owner[-1:], -1),
+                            ("indeg", plan.indeg[-1:], 0),
+                            ("tile_row pad", plan.tile_row[:, -1], nb),
+                            ("tile_col pad", plan.tile_col[:, -1], nb)):
+        if np.any(np.asarray(arr) != want):
+            sink.fail("kc.pad.inert",
+                      f"{name} sentinel is not {want}")
+
+
+def _check_donation(sink: RuleSink) -> None:
+    """The carries must not be donated (see the aliasing note at the
+    ``pallas_call`` site): lint the kernel module's source for donation."""
+    import inspect
+
+    from repro.kernels import superstep
+
+    sink.check("kc.carry.donation")
+    src = inspect.getsource(superstep)
+    for needle in ("input_output_aliases=", "donate_argnums="):
+        if needle in src:
+            sink.fail(
+                "kc.carry.donation",
+                f"kernels/superstep.py passes {needle.rstrip('=')} — carries "
+                "must not alias their inputs (acc/x share a CSE'd zero "
+                "buffer)",
+            )
+
+
+def _check_segments(plan: "Plan", sink: RuleSink) -> None:
+    from repro.core.solver import fused_segments
+
+    sink.check("kc.segments.partition")
+    segs = np.asarray(fused_segments(plan))
+    T = plan.n_levels
+    if T == 0:
+        if len(segs):
+            sink.fail("kc.segments.partition",
+                      "0-level plan has fused segments")
+        return
+    flat = []
+    for lo, hi in segs:
+        if hi <= lo:
+            sink.fail("kc.segments.partition",
+                      f"empty fused segment [{int(lo)}, {int(hi)})")
+        flat.extend(range(int(lo), int(hi)))
+    if flat != list(range(T)):
+        sink.fail(
+            "kc.segments.partition",
+            f"fused segments {segs.tolist()} do not partition [0, {T}) "
+            "in order",
+        )
+        return
+    if (plan.config.comm == "zerocopy" and plan.n_devices > 1
+            and plan.n_boundary_rows > 0):
+        wid = _widths(plan)
+        starts = {int(lo) for lo, _ in segs}
+        for t in range(T):
+            if wid[t, 2] > 0 and t not in starts:
+                sink.fail(
+                    "kc.segments.partition",
+                    f"level {t} has a non-empty exchange bucket but sits "
+                    "mid-segment — the fused executor psums only at segment "
+                    "starts, so this exchange never runs", level=t,
+                )
+
+
+def _check_streaming(plan: "Plan", sink: RuleSink) -> None:
+    from repro.core.solver import (stream_dma_bytes_per_solve, stream_widths,
+                                   streamed_stores)
+    from repro.kernels.superstep import stream_scratch_shapes
+
+    for rule in ("kc.stream.ladder", "kc.stream.slices", "kc.stream.bytes",
+                 "kc.scratch.shape"):
+        sink.check(rule)
+    B = plan.bs.B
+    T = plan.n_levels
+    wid = _widths(plan)
+    sw, uw = stream_widths(plan)
+    for name, lad, col in (("solve", sw, 0), ("update", uw, 1)):
+        actual = ({int(w) for w in wid[:, col]} if T else {0})
+        if set(lad) != actual:
+            sink.fail(
+                "kc.stream.ladder",
+                f"{name} DMA ladder {sorted(lad)} != distinct level widths "
+                f"{sorted(actual)} (a width outside the ladder moves no "
+                "data; a stale entry pairs a DMA start with no wait)",
+            )
+
+    diag_sched, tiles_sched = streamed_stores(plan)
+    extents = (diag_sched.shape[1], tiles_sched.shape[1])
+    total = 0
+    for name, col, extent in (("solve", 0, extents[0]),
+                              ("update", 1, extents[1])):
+        cover = np.zeros(extent, dtype=np.int64)
+        for t in range(T):
+            lo = int(plan.lvl_off[t, col])
+            hi = lo + int(wid[t, col])
+            if lo < 0 or hi > extent:
+                sink.fail(
+                    "kc.stream.slices",
+                    f"level {t} {name} slice [{lo}, {hi}) leaves the store "
+                    f"extent [0, {extent})", level=t,
+                )
+                continue
+            cover[lo:hi] += 1
+        total += int(wid[:, col].sum()) if T else 0
+        over = np.nonzero(cover > 1)[0]
+        if over.size:
+            sink.fail(
+                "kc.stream.slices",
+                f"{over.size} {name} store slots are claimed by more than "
+                f"one level slice (first at flat index {int(over[0])}) — "
+                "overlapping DMA bursts feed one level another level's "
+                "tiles",
+            )
+        used = int(wid[:, col].sum()) if T else 0
+        gap = np.nonzero(cover[:used] == 0)[0]
+        if gap.size:
+            sink.fail(
+                "kc.stream.slices",
+                f"{gap.size} {name} store slots inside the schedule "
+                f"footprint are covered by no level slice (first at flat "
+                f"index {int(gap[0])})",
+            )
+
+    want_bytes = total * B * B * 4
+    got_bytes = stream_dma_bytes_per_solve(plan)
+    if got_bytes != want_bytes:
+        sink.fail(
+            "kc.stream.bytes",
+            f"stream_dma_bytes_per_solve reports {got_bytes} but the "
+            f"schedule footprint is {want_bytes} bytes",
+        )
+
+    dshape, tshape = stream_scratch_shapes(sw, uw, B)
+    want_d = (2, max([int(w) for w in wid[:, 0] if w > 0] or [1]) if T else 1,
+              B, B)
+    want_t = (2, max([int(w) for w in wid[:, 1] if w > 0] or [1]) if T else 1,
+              B, B)
+    if T == 0:
+        want_d = want_t = (2, 1, B, B)
+    for name, got, want in (("diag", dshape, want_d), ("tile", tshape, want_t)):
+        if tuple(got) != tuple(want):
+            sink.fail(
+                "kc.scratch.shape",
+                f"{name} scratch is {tuple(got)}, contract requires "
+                f"(2, max level slice, B, B) = {tuple(want)}",
+            )

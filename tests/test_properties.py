@@ -88,3 +88,27 @@ def test_partition_invariants(bs, strategy):
     expect = np.zeros(bs.nb, bool)
     expect[bs.off_rows[remote]] = True
     assert np.array_equal(part.boundary, expect)
+
+
+@pytest.mark.parametrize("sched,comm", [("levelset", "zerocopy"),
+                                        ("levelset", "unified"),
+                                        ("syncfree", "zerocopy"),
+                                        ("syncfree", "unified")])
+@pytest.mark.parametrize("transpose", [False, True])
+@settings(max_examples=10, **SETTINGS)
+@given(problem=strategies.triangular_problems(max_n=200))
+def test_generated_plans_verify_strict(problem, sched, comm, transpose):
+    """Every plan the builders produce from a generated structure passes the
+    static verifier at the strictest level — happens-before over the
+    compacted schedules plus the kernel-contract lint, for every sched x comm
+    combination, forward and transposed (ISSUE 7: the property version of the
+    pinned mutation fixtures in tests/test_verify.py)."""
+    from repro.verify import verify_plan
+
+    a, _ = problem
+    for D in (1, 4):
+        cfg = SolverConfig(block_size=8, sched=sched, comm=comm,
+                           partition="malleable")
+        report = verify_plan(build_plan(a, D, cfg, transpose=transpose),
+                             level="strict")
+        assert report.passed, "\n".join(str(f) for f in report.findings)

@@ -1,0 +1,402 @@
+"""Static plan verifier (repro.verify): mutation fixtures + wiring tests.
+
+The mutation tests are the verifier's own test oracle (ISSUE 7 satellite):
+each takes a plan that verifies clean, corrupts exactly one schedule facet
+via ``dataclasses.replace`` — swap two levels, drop an exchange row, shrink a
+bucket width, overlap two DMA slices, double-assign a row, and friends — and
+asserts the verifier flags it with the *exact* rule id at the right location.
+Every fixture first asserts the uncorrupted plan passes, so a verifier that
+rubber-stamps everything (or rejects everything) fails loudly here.
+
+The empty-cut regression tests pin the real invariant violation the verifier
+surfaced (``hb.exchange.degenerate``): unified/multi-device plans over an
+empty dependency cut used to schedule dense psums and per-level fused
+segmentation although every update is device-local.
+"""
+import dataclasses
+import io
+
+import numpy as np
+import pytest
+
+import strategies
+from repro.core import DistributedSolver, SolverConfig, build_plan, dispatch_stats
+from repro.core.solver import fused_segments
+from repro.sparse import suite
+from repro.verify import (PlanVerificationError, VerificationReport,
+                          env_verify_level, verify_plan)
+
+# -----------------------------------------------------------------------
+# fixtures: plans that verify clean at the strictest level
+# -----------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def chain_plan():
+    """Single-device chain: one row and one tile per level, no bucket slack —
+    the sharpest fixture for ordering mutations (every slice is tight)."""
+    return build_plan(suite.chain(40), 1, SolverConfig(block_size=8))
+
+
+@pytest.fixture(scope="module")
+def multi_plan():
+    """Two-device levelset/zerocopy plan with a real cut: exchanges, bucket
+    slack (pad slots inside slices), multiple buckets."""
+    a = suite.random_levelled(400, 8, 4.0, seed=6)
+    return build_plan(a, 2, SolverConfig(block_size=8, partition="taskpool"))
+
+
+@pytest.fixture(scope="module")
+def syncfree_plan():
+    a = suite.random_levelled(400, 8, 4.0, seed=6)
+    return build_plan(a, 2, SolverConfig(block_size=8, sched="syncfree",
+                                         partition="taskpool"))
+
+
+def clean(plan):
+    """Assert the uncorrupted plan verifies clean, so a mutation test can
+    never pass because the verifier rejects (or ignores) everything."""
+    report = verify_plan(plan, level="strict")
+    assert report.passed, report.summary() + "\n" + "\n".join(
+        str(f) for f in report.findings)
+    return plan
+
+
+def mutate(plan, **fields):
+    return dataclasses.replace(plan, **fields)
+
+
+def rules_of(report):
+    return {f.rule for f in report.findings}
+
+
+def level_slice(plan, t, col):
+    lo = int(plan.lvl_off[t, col])
+    return lo, lo + int(plan.buckets[int(plan.lvl_bucket[t])][col])
+
+
+# -----------------------------------------------------------------------
+# mutation fixtures (ISSUE 7 satellite): one corruption, one exact rule
+# -----------------------------------------------------------------------
+
+
+def test_mutation_swap_two_levels(chain_plan):
+    """Swapping two solve slices breaks src-before: the level-1 tile now
+    reads a source row that only solves in superstep 2."""
+    plan = clean(chain_plan)
+    sr = plan.solve_rows.copy()
+    (l1, _), (l2, _) = level_slice(plan, 1, 0), level_slice(plan, 2, 0)
+    sr[:, [l1, l2]] = sr[:, [l2, l1]]
+    report = verify_plan(mutate(plan, solve_rows=sr), level="basic")
+    assert not report.passed
+    bad = report.by_rule("hb.upd.src-before")
+    assert bad and bad[0].level == 1
+    # the swapped-down row's own update now lands in its solve superstep
+    assert report.by_rule("hb.upd.dest-after")
+
+
+def test_mutation_drop_exchange_row(multi_plan):
+    """Padding out one exchange entry leaves a remote-dependent row reading
+    only its local partial sum."""
+    plan = clean(multi_plan)
+    owner = np.asarray(plan.part.owner)
+    rows, cols = plan.bs.off_rows, plan.bs.off_cols
+    remote_dest = set(np.unique(rows[owner[cols] != owner[rows]]).tolist())
+    assert remote_dest, "fixture must have a non-empty cut"
+    idx = next(i for i, r in enumerate(plan.ex_rows)
+               if int(r) in remote_dest)
+    victim = int(plan.ex_rows[idx])
+    ex = plan.ex_rows.copy()
+    ex[idx] = plan.bs.nb  # pad sentinel: psum of the inert slot
+    report = verify_plan(mutate(plan, ex_rows=ex), level="basic")
+    bad = report.by_rule("hb.exchange.missing")
+    assert bad and victim in bad[0].rows
+
+
+def test_mutation_shrink_bucket_width(chain_plan):
+    """Shrinking a bucket's solve width truncates every level using it."""
+    plan = clean(chain_plan)
+    bid = int(plan.lvl_bucket[0])
+    ws, wu, we = plan.buckets[bid]
+    assert ws >= 1
+    buckets = tuple((ws - 1, wu, we) if i == bid else b
+                    for i, b in enumerate(plan.buckets))
+    report = verify_plan(mutate(plan, buckets=buckets), level="contracts")
+    bad = report.by_rule("kc.buckets.cover")
+    assert bad and bad[0].level == 0
+    # the offset table no longer cumsums the (shrunken) widths either
+    assert report.by_rule("kc.offsets.cumsum")
+    assert report.by_rule("kc.flats.length")
+
+
+def test_mutation_overlap_dma_slices(chain_plan):
+    """Shifting one level's update offset overlaps the previous level's HBM
+    slice — the streamed kernel would DMA level 0's tile into level 1's
+    compute — and leaves this level's own last slot uncovered."""
+    plan = clean(chain_plan)
+    off = plan.lvl_off.copy()
+    assert off[1, 1] > 0
+    off[1, 1] -= 1
+    report = verify_plan(mutate(plan, lvl_off=off), level="contracts")
+    msgs = [f.message for f in report.by_rule("kc.stream.slices")]
+    assert any("more than one level slice" in m for m in msgs)
+    assert any("covered by no level slice" in m for m in msgs)
+    assert report.by_rule("kc.offsets.cumsum")
+
+
+def test_mutation_double_assign_row(multi_plan):
+    """Writing an already-solved row into a pad slot of a later slice solves
+    it twice — the second TRSV runs on a stale accumulator."""
+    plan = clean(multi_plan)
+    sr = plan.solve_rows.copy()
+    spot = None
+    for t in range(1, plan.n_levels):
+        lo, hi = level_slice(plan, t, 0)
+        for d in range(plan.n_devices):
+            pads = np.nonzero(sr[d, lo:hi] == -1)[0]
+            if not pads.size:
+                continue  # no bucket slack for this device at this level
+            for te in range(t):  # a row d already solved earlier
+                le, he = level_slice(plan, te, 0)
+                real = [int(r) for r in sr[d, le:he] if int(r) != -1]
+                if real:
+                    spot = (d, lo + int(pads[0]), t, te, real[0])
+                    break
+            if spot:
+                break
+        if spot:
+            break
+    assert spot, "fixture must have bucket slack"
+    d, slot, t, te, victim = spot
+    sr[d, slot] = victim
+    report = verify_plan(mutate(plan, solve_rows=sr), level="basic")
+    bad = report.by_rule("hb.solve.once")
+    assert bad and victim in bad[0].rows
+    assert f"supersteps [{te}, {t}]" in bad[0].message
+
+
+def test_mutation_double_schedule_tile(chain_plan):
+    """Re-scheduling a store slot double-counts its contribution."""
+    plan = clean(chain_plan)
+    ut = plan.upd_tiles.copy()
+    (l0, _), (l1, _) = level_slice(plan, 0, 1), level_slice(plan, 1, 1)
+    ut[0, l1] = ut[0, l0]
+    report = verify_plan(mutate(plan, upd_tiles=ut), level="basic")
+    bad = report.by_rule("hb.upd.once")
+    assert bad and any("updated twice" in f.message for f in bad)
+    # the displaced level-1 tile is now never scheduled
+    assert any("never scheduled" in f.message for f in bad)
+
+
+def test_mutation_disowned_row(multi_plan):
+    """A row scheduled on a device that does not own it solves against a
+    store that never receives the row's tiles."""
+    plan = clean(multi_plan)
+    sr = plan.solve_rows.copy()
+    lo, hi = level_slice(plan, 0, 0)
+    d = next(d for d in range(plan.n_devices)
+             if any(int(r) != -1 for r in sr[d, lo:hi]))
+    other = (d + 1) % plan.n_devices
+    pos = lo + next(i for i, r in enumerate(sr[d, lo:hi]) if int(r) != -1)
+    row = int(sr[d, pos])
+    sr[other, pos], sr[d, pos] = row, -1
+    report = verify_plan(mutate(plan, solve_rows=sr), level="basic")
+    bad = report.by_rule("hb.solve.owner")
+    assert bad and bad[0].device == other and row in bad[0].rows
+
+
+def test_mutation_undershoot_frontier_caps(syncfree_plan):
+    """A frontier cap below the widest per-device level silently drops
+    solves: the runtime marks all ready rows solved but only computes the
+    dispatched branch width."""
+    plan = clean(syncfree_plan)
+    report = verify_plan(mutate(plan, frontier_caps=(1, 1)), level="basic")
+    bad = report.by_rule("hb.syncfree.caps")
+    assert len(bad) == 2  # both the solve and the update cap undershoot
+
+
+def test_mutation_duplicate_boundary_row(syncfree_plan):
+    """A boundary row listed twice is scatter-added twice per sweep."""
+    plan = clean(syncfree_plan)
+    exb = plan.ex_boundary.copy()
+    real = np.nonzero(exb != plan.bs.nb)[0]
+    assert real.size >= 2
+    exb[real[1]] = exb[real[0]]
+    report = verify_plan(mutate(plan, ex_boundary=exb), level="basic")
+    bad = report.by_rule("hb.exchange.once")
+    assert bad and int(exb[real[0]]) in bad[0].rows
+
+
+def test_mutation_bucket_id_out_of_range(chain_plan):
+    """A corrupt bucket id is flagged (not crashed on) by the lint."""
+    plan = clean(chain_plan)
+    lb = plan.lvl_bucket.copy()
+    lb[0] = len(plan.buckets) + 3
+    report = verify_plan(mutate(plan, lvl_bucket=lb), level="contracts")
+    bad = report.by_rule("kc.buckets.fit")
+    assert bad and bad[0].level == 0
+
+
+def test_mutation_poisoned_pad_tile(chain_plan):
+    """A non-zero pad tile would inject garbage through every pad update."""
+    plan = clean(chain_plan)
+    tiles = plan.tiles.copy()
+    tiles[0, -1] = 1.0
+    report = verify_plan(mutate(plan, tiles=tiles), level="contracts")
+    assert any("zero tile" in f.message
+               for f in report.by_rule("kc.pad.inert"))
+
+
+# -----------------------------------------------------------------------
+# empty-cut regression (the violation the verifier surfaced, now fixed)
+# -----------------------------------------------------------------------
+
+
+def test_unified_empty_cut_schedules_no_communication():
+    """Diagonal-only matrices have an empty cut under any partition: the
+    unified plan must not schedule dense psums or per-level fused launches
+    (hb.exchange.degenerate — the bug this PR's verifier caught)."""
+    a = strategies.diagonal_matrix()
+    plan = build_plan(a, 4, SolverConfig(block_size=8, comm="unified"))
+    assert plan.n_boundary_rows == 0
+    assert plan.comm_bytes_per_solve == 0
+    assert len(fused_segments(plan)) == 1
+    ds = dispatch_stats(plan)
+    assert ds["fused_launches"] == 1 and ds["exchanges"] == 0
+    assert verify_plan(plan, level="strict").passed
+
+
+@pytest.mark.parametrize("sched", ["levelset", "syncfree"])
+@pytest.mark.parametrize("comm", ["zerocopy", "unified"])
+def test_empty_cut_plans_verify_strict(sched, comm):
+    """Every sched x comm combination over an empty cut is degeneracy-free."""
+    a = strategies.diagonal_matrix()
+    plan = build_plan(a, 4, SolverConfig(block_size=8, sched=sched, comm=comm))
+    report = verify_plan(plan, level="strict")
+    assert report.passed, "\n".join(str(f) for f in report.findings)
+
+
+def test_unified_empty_cut_solve_matches_reference():
+    """The degenerate-path executor (no psums, single launch) still solves
+    correctly on one device."""
+    a = strategies.diagonal_matrix()
+    b = np.arange(1.0, a.n + 1)
+    plan = build_plan(a, 1, SolverConfig(block_size=8, comm="unified"))
+    x = DistributedSolver(plan, strategies.mesh1()).solve(b)
+    np.testing.assert_allclose(np.asarray(x), b / 2.0, rtol=1e-6)
+
+
+# -----------------------------------------------------------------------
+# clean-plan coverage: builders x modes verify at the strictest level
+# -----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sched", ["levelset", "syncfree"])
+@pytest.mark.parametrize("comm", ["zerocopy", "unified"])
+@pytest.mark.parametrize("transpose", [False, True])
+def test_builder_plans_verify_strict(sched, comm, transpose):
+    a = suite.random_levelled(300, 8, 4.0, seed=7, locality=0.8)
+    for D in (1, 4):
+        plan = build_plan(a, D, SolverConfig(
+            block_size=8, sched=sched, comm=comm, partition="malleable"),
+            transpose=transpose)
+        report = verify_plan(plan, level="strict")
+        assert report.passed, "\n".join(str(f) for f in report.findings)
+        assert len(report.rules_checked) >= 10
+
+
+def test_sweep_module_is_green():
+    """The CI gate itself: the full matrix x mode grid verifies clean."""
+    from repro.verify.sweep import run_sweep
+
+    out = io.StringIO()
+    assert run_sweep(level="strict", out=out) == 0
+    assert "PASS" in out.getvalue()
+
+
+# -----------------------------------------------------------------------
+# report + wiring
+# -----------------------------------------------------------------------
+
+
+def test_report_shape_and_serialization(chain_plan):
+    report = verify_plan(chain_plan, level="strict")
+    assert isinstance(report, VerificationReport)
+    assert report.level == "strict" and report.passed
+    assert "hb.upd.src-before" in report.rules_checked
+    assert "kc.stream.slices" in report.rules_checked
+    d = report.to_dict()
+    assert d["passed"] and d["plan"]["sched"] == "levelset"
+    assert d["findings"] == []
+    assert report.raise_if_failed() is report
+    assert "PASS" in report.summary()
+
+
+def test_report_raise_carries_findings(chain_plan):
+    sr = chain_plan.solve_rows.copy()
+    sr[0, 0] = -1  # row 0 is never solved
+    bad = mutate(chain_plan, solve_rows=sr)
+    with pytest.raises(PlanVerificationError) as ei:
+        verify_plan(bad, level="basic").raise_if_failed()
+    assert ei.value.report.by_rule("hb.solve.once")
+    assert "hb.solve.once" in str(ei.value)
+    f = ei.value.report.by_rule("hb.solve.once")[0].to_dict()
+    assert f["rows"] == [0] and f["severity"] == "error"
+
+
+def test_basic_level_skips_contract_lint(chain_plan):
+    report = verify_plan(chain_plan, level="basic")
+    assert not any(r.startswith("kc.") for r in report.rules_checked)
+    with pytest.raises(ValueError, match="invalid verify level"):
+        verify_plan(chain_plan, level="paranoid")
+
+
+def test_env_verify_level(monkeypatch):
+    monkeypatch.delenv("REPRO_VERIFY", raising=False)
+    assert env_verify_level() is None
+    assert env_verify_level(default="basic") == "basic"
+    for raw, want in (("", None), ("0", None), ("off", None),
+                      ("none", None), ("false", None),
+                      ("basic", "basic"), ("contracts", "contracts"),
+                      ("strict", "strict"), ("1", "strict"),
+                      ("yes", "strict"), ("STRICT", "strict")):
+        monkeypatch.setenv("REPRO_VERIFY", raw)
+        assert env_verify_level(default="basic") == want, raw
+
+
+def test_build_plan_verify_optin(monkeypatch):
+    from repro.obs.metrics import get_registry
+
+    a = suite.chain(40)
+    runs = get_registry().counter("verify.runs")
+    before = runs.value
+    build_plan(a, 1, SolverConfig(block_size=8), verify="strict")
+    assert runs.value == before + 1
+    # env opt-in reaches build_plan without the kwarg
+    monkeypatch.setenv("REPRO_VERIFY", "strict")
+    build_plan(a, 1, SolverConfig(block_size=8))
+    assert runs.value == before + 2
+    monkeypatch.delenv("REPRO_VERIFY")
+    build_plan(a, 1, SolverConfig(block_size=8))
+    assert runs.value == before + 2  # off by default
+
+
+def test_plan_options_verify_field():
+    from repro.api import PlanOptions
+
+    assert PlanOptions(verify="strict").verify == "strict"
+    assert PlanOptions().verify is None
+    with pytest.raises(ValueError, match="invalid verify"):
+        PlanOptions(verify="paranoid")
+
+
+def test_verify_emits_trace_span(chain_plan):
+    from repro.obs.trace import trace_to
+
+    with trace_to() as tracer:
+        verify_plan(chain_plan, level="contracts")
+        records = tracer.export()
+    spans = [r for r in records
+             if r.get("type") == "span" and r["name"] == "sptrsv.verify"]
+    assert spans and spans[0]["attrs"]["passed"] is True
+    assert spans[0]["attrs"]["n_errors"] == 0
