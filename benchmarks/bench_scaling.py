@@ -7,6 +7,10 @@ Each device count runs both the round-robin ``taskpool`` and the cost-model
 matrices also the superstep megakernel backend (``.../fused`` rows) so the
 fused-vs-switch gap is tracked across the scaling curve (on CPU the fused
 rows time Pallas interpret mode — see bench_tasks for the flagged caveat).
+The same focus matrices also emit ``sched/<matrix>/<D>dev/dagpart`` rows so
+the merged-superstep scheduler's superstep/exchange counts are tracked per
+device count (boundary cuts limit which levels may merge, so the reduction
+is a function of D).
 """
 from __future__ import annotations
 
@@ -16,7 +20,8 @@ import numpy as np
 
 from repro import compat
 from benchmarks.common import bench_scale, emit, time_call
-from repro.core import DistributedSolver, SolverConfig, build_plan, solve_local
+from repro.core import (DistributedSolver, SolverConfig, build_plan,
+                        dispatch_stats, solve_local)
 from repro.core.blocking import pad_rhs
 from repro.sparse.suite import table1_suite
 
@@ -61,6 +66,20 @@ def main() -> None:
                     us = time_call(solver.solve_blocks, b)
                     emit(f"fig10/{entry.name}/{D}dev/{kb}", us,
                          f"speedup_vs_1dev={base_us/us:.2f}")
+                cfg = SolverConfig(block_size=16, comm="zerocopy",
+                                   partition="taskpool", sched="dagpart",
+                                   tasks_per_device=max(1, total_tasks // D))
+                plan = build_plan(a, D, cfg)
+                ds = dispatch_stats(plan)
+                solver = DistributedSolver(plan, mesh)
+                us = time_call(solver.solve_blocks, b)
+                emit(f"sched/{entry.name}/{D}dev/dagpart", us,
+                     f"speedup_vs_1dev={base_us/us:.2f};"
+                     f"supersteps={ds['supersteps']};"
+                     f"supersteps_levelset={ds['supersteps_levelset']};"
+                     f"launches={ds['switch_dispatches']};"
+                     f"exchanges={ds['exchanges']};"
+                     f"schedule_table_bytes={ds['schedule_table_bytes']}")
 
 
 if __name__ == "__main__":

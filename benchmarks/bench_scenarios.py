@@ -7,6 +7,7 @@ malleable cost-model partition on top of the zero-copy exchange):
   shmem              4GPU-Shmem          packed boundary exchange, contiguous
   zerocopy           4GPU-Zerocopy       packed exchange + task-pool (8 tasks)
   malleable          (this repo)         packed exchange + cost-model partition
+  dagpart            (this repo)         zerocopy + DAG-partition merged supersteps
 
 Derived column: speedup over `unified` (the paper's normalization). Runs
 through one :class:`repro.api.SpTRSVContext` per matrix — the five scenarios
@@ -32,6 +33,10 @@ SCENARIOS = {
                             tasks_per_device=8),
     "malleable": PlanOptions(block_size=16, comm="zerocopy", partition="malleable",
                              tasks_per_device=8),
+    # the quick-lane dagpart axis: merged plans stay timed (and, through the
+    # context's verify hook, buildable) on every PR, not just full runs
+    "dagpart": PlanOptions(block_size=16, comm="zerocopy", partition="taskpool",
+                           tasks_per_device=8, sched="dagpart"),
 }
 
 

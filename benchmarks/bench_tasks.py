@@ -11,6 +11,13 @@ run through the superstep megakernel (``kernel_backend="fused"``) vs the
 ``lax.switch`` executor, with the exact dispatch counts from
 ``dispatch_stats`` in the derived column — the launch-overhead claim is
 measured, not asserted.
+
+And the ``sched/<matrix>/{levelset,dagpart}`` comparison: the DAG-partition
+merged-superstep scheduler vs plain levelset on the chain-skewed focus
+matrices plus a synthetic long chain, with superstep / launch / exchange /
+schedule-table-byte counts in the derived column. The counts are exact plan
+statics (no noise floor), which is what ``benchmarks/compare.py``'s
+superstep-reduction predicate gates on.
 """
 from __future__ import annotations
 
@@ -25,6 +32,7 @@ from repro.sparse.suite import table1_suite
 TASKS = [1, 2, 4, 8, 16, 32]
 STRATEGIES = ("taskpool", "malleable")
 KERNEL_FOCUS = ("dc2", "pkustk14")  # wide + chain-skewed regimes
+SCHED_FOCUS = ("dc2", "pkustk14")  # dagpart-vs-levelset comparison matrices
 
 
 def main() -> None:
@@ -85,6 +93,45 @@ def main() -> None:
                  f"dma_bytes={st_stats['stream_dma_bytes']};"
                  f"speedup_vs_resident={times['fused'] / times['fused_streamed']:.2f};"
                  f"fused_mode={mode}")
+
+    # dagpart vs levelset: merged-superstep scheduling on chain-heavy
+    # structures. Each dagpart row's derived column is self-contained (it
+    # carries both its own and the levelset superstep count) so the
+    # compare.py reduction gate needs no row joins.
+    from repro.sparse import suite as sparse_suite
+
+    sched_cases = [(e.name, e.build(), "taskpool") for e in suite
+                   if e.name in SCHED_FOCUS]
+    # the chain keeps a 1024-row floor (so the merge regime survives
+    # REPRO_BENCH_SCALE) and uses the contiguous partition — a chain has no
+    # level parallelism, and round-robin dealing would put every dependency
+    # across a device boundary, where no merge is legal
+    sched_cases.append(
+        ("chain", sparse_suite.chain(max(1024, int(4000 * bench_scale()))),
+         "contiguous"))
+    for name, a, partition in sched_cases:
+        b = jnp.asarray(pad_rhs(np.random.default_rng(0).uniform(-1, 1, a.n),
+                                build_plan(a, 1, SolverConfig(block_size=16)).bs))
+        stats, times = {}, {}
+        for sched in ("levelset", "dagpart"):
+            cfg = SolverConfig(block_size=16, comm="zerocopy",
+                               partition=partition, tasks_per_device=8,
+                               sched=sched)
+            plan = build_plan(a, D, cfg)
+            stats[sched] = dispatch_stats(plan)
+            solver = DistributedSolver(plan, mesh)
+            times[sched] = time_call(solver.solve_blocks, b)
+        for sched in ("levelset", "dagpart"):
+            ds = stats[sched]
+            emit(f"sched/{name}/{sched}", times[sched],
+                 f"supersteps={ds['supersteps']};"
+                 f"supersteps_levelset={ds['supersteps_levelset']};"
+                 f"launches={ds['switch_dispatches']};"
+                 f"fused_launches={ds['fused_launches']};"
+                 f"exchanges={ds['exchanges']};"
+                 f"schedule_table_bytes={ds['schedule_table_bytes']};"
+                 f"speedup_vs_levelset="
+                 f"{times['levelset'] / times[sched]:.2f}")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,14 @@ A dedicated gate watches the fused-vs-switch executor ratio: for every
 ``fused/switch`` time ratio must not regress more than
 ``--max-fused-regression`` vs the window's median ratio — the megakernel's
 advantage is a first-class trajectory metric, not just two independent rows.
+
+A second dedicated gate watches the DAG-partition scheduler: every
+``sched/<matrix>/dagpart`` row on a chain-heavy matrix must report a
+superstep reduction (``supersteps_levelset / supersteps``, parsed from the
+row's self-contained derived column) of at least
+``--min-superstep-reduction`` (default 2x). These are exact plan statics —
+no noise floor, no window median: a merge-heuristic regression that stops
+collapsing the chain fails the *new* run outright.
 """
 from __future__ import annotations
 
@@ -30,6 +38,10 @@ import json
 import sys
 
 MIN_US = 50.0  # ignore rows faster than this: pure scheduler noise on CI
+
+# matrices whose level structure is dominated by long narrow chains — the
+# regime the dagpart merge pass exists for; its reduction is gated on these
+CHAIN_HEAVY = ("chain",)
 
 
 def load_rows(path: str) -> dict:
@@ -64,6 +76,47 @@ def provenance_note(old_path: str, new_path: str) -> str:
         if ov != nv and (ov or nv):
             diffs.append(f"{key}: {ov!r} -> {nv!r}")
     return "; ".join(diffs)
+
+
+def parse_derived(derived: str) -> dict:
+    """``k=v;...`` derived column -> dict of raw string values."""
+    out = {}
+    for part in str(derived).split(";"):
+        key, sep, val = part.partition("=")
+        if sep:
+            out[key.strip()] = val.strip()
+    return out
+
+
+def superstep_reductions(path: str) -> dict:
+    """``matrix -> supersteps_levelset / supersteps`` for every
+    ``sched/<matrix>/dagpart`` row whose derived column carries both counts
+    (each row is self-contained, so no join against the levelset row)."""
+    with open(path) as f:
+        rows = json.load(f)
+    out = {}
+    for name, row in rows.items():
+        if name.startswith("_") or not isinstance(row, dict):
+            continue
+        parts = name.split("/")
+        if len(parts) != 3 or parts[0] != "sched" or parts[2] != "dagpart":
+            continue
+        d = parse_derived(row.get("derived", ""))
+        try:
+            steps = float(d["supersteps"])
+            base = float(d["supersteps_levelset"])
+        except (KeyError, ValueError):
+            continue
+        if steps > 0:
+            out[parts[1]] = base / steps
+    return out
+
+
+def gate_superstep_reduction(path: str, min_reduction: float) -> list:
+    """``(matrix, reduction)`` failures: chain-heavy dagpart rows in the new
+    run whose merged plan keeps too many supersteps."""
+    return [(m, r) for m, r in sorted(superstep_reductions(path).items())
+            if m in CHAIN_HEAVY and r < min_reduction]
 
 
 def _median(vals: list) -> float:
@@ -145,6 +198,10 @@ def main(argv=None) -> int:
     ap.add_argument("--max-fused-regression", type=float, default=0.25,
                     help="fail when the fused/switch time ratio grows by more "
                          "than this vs the window median")
+    ap.add_argument("--min-superstep-reduction", type=float, default=2.0,
+                    help="fail when a chain-heavy sched/<m>/dagpart row in "
+                         "the new run reduces supersteps by less than this "
+                         "factor vs levelset")
     args = ap.parse_args(argv)
     if len(args.files) < 2:
         ap.error("need at least one previous and one new JSON")
@@ -153,6 +210,8 @@ def main(argv=None) -> int:
     regressions, improvements, skipped, zeroed = compare(
         window, new, args.max_regression)
     fused_regr = compare_fused(window, new, args.max_fused_regression)
+    sched_regr = gate_superstep_reduction(args.files[-1],
+                                          args.min_superstep_reduction)
 
     seen_prev = set().union(*window)
     only_prev = sorted(seen_prev - set(new))
@@ -174,13 +233,18 @@ def main(argv=None) -> int:
         print(f"[compare] FUSED-RATIO REGRESSED kernel/{matrix}: "
               f"fused/switch {base:.2f} -> {ratio:.2f} "
               f"(>{1 + args.max_fused_regression:.2f}x)")
-    if regressions or fused_regr:
+    for matrix, reduction in sched_regr:
+        print(f"[compare] SUPERSTEP REDUCTION FAILED sched/{matrix}/dagpart: "
+              f"{reduction:.2f}x < required "
+              f"{args.min_superstep_reduction:.2f}x")
+    if regressions or fused_regr or sched_regr:
         note = provenance_note(args.files[0], args.files[-1])
         if note:
             print(f"[compare] provenance drift (informational): {note}")
         print(f"[compare] FAIL: {len(regressions)} row(s) regressed "
               f">{args.max_regression:.0%}, {len(fused_regr)} fused-ratio "
-              f"regression(s)")
+              f"regression(s), {len(sched_regr)} superstep-reduction "
+              f"failure(s)")
         return 1
     print("[compare] OK")
     return 0

@@ -1,9 +1,10 @@
 """Backend auto-tuning for the session API.
 
 The right execution mode is matrix-dependent: a chain-skewed factor wants the
-fused megakernel's low launch count, a wide shallow DAG wants the syncfree
-frontier, a heavily cut partition may prefer unified's dense psum over many
-packed exchanges. ``PlanOptions`` marks any of ``sched``/``comm``/``kernel``
+fused megakernel's low launch count (and ``dagpart``'s merged supersteps,
+which collapse a long run of narrow levels into a handful of grid steps), a
+wide shallow DAG wants the syncfree frontier, a heavily cut partition may
+prefer unified's dense psum over many packed exchanges. ``PlanOptions`` marks any of ``sched``/``comm``/``kernel``
 as ``auto`` and this module resolves them:
 
 1. enumerate the candidate (sched, comm, kernel) combinations — all sharing
@@ -49,7 +50,7 @@ DISPATCH_OVERHEAD = 8.0
 # would measure.
 INTERPRET_PENALTY = 100.0
 
-SCHED_CANDIDATES = ("levelset", "syncfree")
+SCHED_CANDIDATES = ("levelset", "dagpart", "syncfree")
 COMM_CANDIDATES = ("zerocopy", "unified")
 
 
@@ -89,7 +90,7 @@ def plan_work_units(plan: Plan, R: int = 1) -> tuple[float, float, float]:
     cfg = plan.config
     wid = level_widths(plan) if plan.n_levels else np.zeros((0, 3), np.int64)
     fused = ops.executor_backend(cfg.kernel_backend) in ops.FUSED_BACKENDS
-    if cfg.sched == "levelset" or fused:
+    if cfg.sched != "syncfree" or fused:
         # frontier-bucketed syncfree work is approximated by the same
         # per-level schedule widths the levelset executors dispatch
         n_solve, n_tiles = float(wid[:, 0].sum()), float(wid[:, 1].sum())
@@ -118,7 +119,7 @@ def estimate_plan_cost(plan: Plan, R: int = 1) -> float:
     fused = backend in ops.FUSED_BACKENDS
     su, tu, tf = plan_work_units(plan, R)
     compute = w_solve * su + w_tile_mem * tu + w_tile_flop * tf
-    if cfg.sched == "levelset":
+    if cfg.sched != "syncfree":
         ds = dispatch_stats(plan)
         launches = (ds["fused_launches"] if fused
                     else ds["switch_dispatches"]) + ds["exchanges"]
@@ -133,7 +134,7 @@ def estimate_plan_cost(plan: Plan, R: int = 1) -> float:
     if fused and fused_streaming(plan, R):
         dma = stream_dma_bytes_per_solve(plan) * FLOPS_PER_BYTE / (B * B)
     cost = compute + comm + dma + DISPATCH_OVERHEAD * launches
-    if fused and cfg.sched == "levelset" and ops.interpret_mode():
+    if fused and cfg.sched != "syncfree" and ops.interpret_mode():
         cost *= INTERPRET_PENALTY
     return cost
 

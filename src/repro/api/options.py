@@ -74,6 +74,9 @@ class PlanOptions:
     tasks_per_device: int = 8
     gemv_group: int = 0
     rhs_hint: int = 1  # expected RHS panel width, feeds cost model + probes
+    # dagpart merge heuristic knobs (see core.partition.merge_levels):
+    merge_width: int = 64  # per-device row budget of one merged superstep
+    merge_cost: float = 0.0  # narrow-level cost cap; 0 = calibrated threshold
     calibrate_cost: bool = False  # calibrate cost weights via hlo_cost
     probe_solves: int = 0  # >0: measure each auto candidate this many times
     # static plan verification level ("basic"/"contracts"/"strict") applied to
@@ -90,9 +93,12 @@ class PlanOptions:
             self, "kernel", _coerce(KernelBackend, self.kernel, "kernel", allow_auto=True)
         )
         for name, lo in (("block_size", 1), ("tasks_per_device", 1),
-                         ("rhs_hint", 1), ("probe_solves", 0), ("gemv_group", 0)):
+                         ("rhs_hint", 1), ("probe_solves", 0), ("gemv_group", 0),
+                         ("merge_width", 1)):
             if int(getattr(self, name)) < lo:
                 raise ValueError(f"{name} must be >= {lo}, got {getattr(self, name)}")
+        if float(self.merge_cost) < 0:
+            raise ValueError(f"merge_cost must be >= 0, got {self.merge_cost}")
         if self.verify is not None:
             from repro.verify import LEVELS
 
@@ -122,7 +128,8 @@ class PlanOptions:
             block_size=config.block_size, sched=config.sched, comm=config.comm,
             partition=config.partition, kernel=config.kernel_backend,
             tasks_per_device=config.tasks_per_device, gemv_group=config.gemv_group,
-            rhs_hint=config.rhs_hint, calibrate_cost=config.calibrate_cost,
+            rhs_hint=config.rhs_hint, merge_width=config.merge_width,
+            merge_cost=config.merge_cost, calibrate_cost=config.calibrate_cost,
         )
 
     def to_config(self, *, sched: str | None = None, comm: str | None = None,
@@ -140,6 +147,7 @@ class PlanOptions:
             partition=self.partition.value, tasks_per_device=self.tasks_per_device,
             kernel_backend=None if kernel == KernelBackend.DEFAULT.value else kernel,
             gemv_group=self.gemv_group, rhs_hint=self.rhs_hint,
+            merge_width=self.merge_width, merge_cost=self.merge_cost,
             calibrate_cost=self.calibrate_cost,
         )
 

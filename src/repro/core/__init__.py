@@ -1,7 +1,13 @@
 """The paper's primary contribution: distributed zero-copy SpTRSV."""
 from repro.core.analysis import in_degrees, level_sets, metrics
 from repro.core.blocking import BlockStructure, build_blocks, pad_rhs, unpad_x
-from repro.core.partition import Partition, cut_stats, make_partition
+from repro.core.partition import (
+    Partition,
+    cut_stats,
+    make_partition,
+    merge_levels,
+    remote_source_levels,
+)
 from repro.core.solver import (
     AXIS,
     DistributedSolver,
@@ -13,8 +19,11 @@ from repro.core.solver import (
     fused_streaming,
     fused_vmem_bytes,
     refresh_plan,
+    schedule_table_bytes,
     solve_local,
     sptrsv,
+    step_offsets,
+    step_widths,
     stream_dma_bytes_per_solve,
     stream_vmem_limit,
     streamed_stores,

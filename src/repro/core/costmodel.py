@@ -33,6 +33,24 @@ from repro.launch import hlo_cost
 
 R_PROBE = 8  # panel width used to fit the per-RHS slope
 FLOPS_PER_BYTE = 4.0  # machine balance: one HBM byte ≈ 4 flop-equivalents
+MERGE_NARROW_ROWS = 8  # a "narrow" level carries at most ~this many typical rows
+
+
+def merge_cost_threshold(weights: tuple = (1.0, 1.0, 1.0), R: int = 1) -> float:
+    """Busiest-device cost below which a level counts as *narrow* for the
+    DAG-partition merge pass (``sched="dagpart"``).
+
+    A level whose critical device does less work than ``MERGE_NARROW_ROWS``
+    typical block rows is launch-overhead-bound: the grid step / exchange
+    segment costs more than the level's compute, so merging it into the
+    neighbouring superstep wins. "Typical row" = one diagonal TRSV plus two
+    tile products, priced by the same (calibrated) weights that drive the
+    malleable placement — the heuristic sharpens automatically as the
+    wall-clock feedback loop refines the weights.
+    """
+    w_solve, w_tile_mem, w_tile_flop = weights
+    unit = w_solve * R + 2.0 * (w_tile_mem + w_tile_flop * R)
+    return MERGE_NARROW_ROWS * max(float(unit), 1e-9)
 
 
 def _measured(fn, *args) -> tuple[float, float]:

@@ -203,6 +203,93 @@ def _make_partition(
     )
 
 
+def remote_source_levels(bs: BlockStructure, part: Partition) -> np.ndarray:
+    """(T,) max block level of any *remote* source column feeding each level
+    (−1 when every tile landing in the level is device-local).
+
+    This is the legality oracle for superstep merging: level ``t`` may join a
+    merged superstep starting at level ``g`` iff ``remote_source_levels[t] <
+    g`` — every cross-device contribution into ``t`` then solved in an
+    *earlier* superstep, so the exchange at the group's start already carries
+    it. Intra-device dependencies are unconstrained: the in-kernel rowsweep
+    executes the group's levels in order.
+    """
+    T = bs.n_block_levels
+    mrs = np.full(T, -1, dtype=np.int64)
+    if part.n_devices <= 1 or T == 0:
+        return mrs
+    remote = part.owner[bs.off_cols] != part.owner[bs.off_rows]
+    if not remote.any():
+        return mrs
+    lvl = bs.block_level
+    np.maximum.at(mrs, lvl[bs.off_rows[remote]], lvl[bs.off_cols[remote]])
+    return mrs
+
+
+def merge_levels(
+    bs: BlockStructure,
+    part: Partition,
+    *,
+    merge_width: int = 64,
+    merge_cost: float = 0.0,
+    cost_weights: tuple | None = None,
+    cost_R: int = 1,
+) -> np.ndarray:
+    """Greedy DAG-partition merge pass: coarsen the levelset schedule into
+    supersteps. Returns ``(n_steps + 1,)`` int32 offsets into the level range
+    — superstep ``s`` executes levels ``[off[s], off[s+1])`` in one grid step.
+
+    Level ``t`` joins the running group (started at level ``g``) iff
+\
+    * **legality** — every remote source into ``t`` solves before ``g``
+      (:func:`remote_source_levels`), so the group-start exchange already
+      carries it;
+    * **narrowness** — both the running group and ``t`` are launch-bound:
+      busiest-device cost per level ≤ ``merge_cost`` (0 → calibrated
+      :func:`repro.core.costmodel.merge_cost_threshold`). Wide levels keep
+      their own superstep — merging them would serialize real parallelism
+      inside the kernel's sequential rowsweep;
+    * **churn cap** — the busiest device's accumulated row count for the
+      group stays ≤ ``merge_width``, bounding per-step schedule slices (and
+      the streamed-DMA burst) so merged steps don't blow the VMEM ladder.
+    """
+    T = bs.n_block_levels
+    if T == 0:
+        return np.zeros(1, dtype=np.int32)
+    weights = cost_weights or DEFAULT_COST_WEIGHTS
+    if merge_cost <= 0:
+        from repro.core.costmodel import merge_cost_threshold
+
+        merge_cost = merge_cost_threshold(weights, R=cost_R)
+    cost = block_row_cost(bs, weights=weights, R=cost_R)
+    lvl = bs.block_level
+    # busiest-device cost and row count per level
+    lvl_cost = np.zeros(T)
+    lvl_rows = np.zeros(T, dtype=np.int64)
+    for d in range(part.n_devices):
+        mine = part.owner == d
+        if mine.any():
+            lvl_cost = np.maximum(lvl_cost, np.bincount(
+                lvl[mine], weights=cost[mine], minlength=T)[:T])
+            lvl_rows = np.maximum(lvl_rows, np.bincount(
+                lvl[mine], minlength=T)[:T])
+    mrs = remote_source_levels(bs, part)
+
+    starts = [0]
+    acc_rows = int(lvl_rows[0])
+    narrow_run = bool(lvl_cost[0] <= merge_cost)
+    for t in range(1, T):
+        narrow = bool(lvl_cost[t] <= merge_cost)
+        if (narrow and narrow_run and mrs[t] < starts[-1]
+                and acc_rows + int(lvl_rows[t]) <= merge_width):
+            acc_rows += int(lvl_rows[t])
+            continue
+        starts.append(t)
+        acc_rows = int(lvl_rows[t])
+        narrow_run = narrow
+    return np.asarray(starts + [T], dtype=np.int32)
+
+
 @dataclasses.dataclass(frozen=True)
 class CutStats:
     """Communication / balance statistics (feeds bench_comm_volume, Fig-3 analogue)."""

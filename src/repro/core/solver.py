@@ -20,6 +20,12 @@ Communication modes (paper Fig. 7 scenarios):
 
 Scheduling modes:
 * ``levelset`` — host-precomputed block wavefronts (Naumov-style baseline).
+* ``dagpart``  — levelset coarsened by the DAG-partition merge pass
+  (:func:`repro.core.partition.merge_levels`): consecutive narrow levels fuse
+  into one superstep whose in-kernel rowsweep executes intra-step
+  dependencies in order — fewer grid steps, fewer exchange segments, smaller
+  schedule tables. The micro-level tables stay byte-identical to levelset;
+  only ``Plan.step_off`` (and the hoisted exchange slices) differ.
 * ``syncfree`` — no level analysis; runtime in-degree counters discover the
   frontier each superstep (the paper's synchronization-free algorithm,
   bulk-synchronous TPU adaptation).
@@ -49,7 +55,9 @@ import warnings
 
 from repro import compat
 from repro.core.blocking import BlockStructure, build_blocks, refresh_block_values
-from repro.core.partition import STRATEGIES, Partition, make_partition
+from repro.core.partition import (
+    STRATEGIES, Partition, make_partition, merge_levels,
+)
 from repro.kernels import ops
 from repro.obs.trace import get_tracer
 from repro.sparse.matrix import CSR, reverse_transpose
@@ -60,7 +68,10 @@ AXIS = "x"  # device axis name used by the solver
 MAX_BUCKETS = 12  # cap on distinct (solve, update, exchange) width combos
 
 COMM_MODES = ("zerocopy", "unified")
-SCHED_MODES = ("levelset", "syncfree")
+SCHED_MODES = ("levelset", "dagpart", "syncfree")
+# scheds that execute the compacted levelset tables (dagpart is levelset plus
+# a superstep coarsening on top of the same flats)
+LEVELSET_SCHEDS = ("levelset", "dagpart")
 
 
 def _check_choice(name: str, value, valid: tuple) -> None:
@@ -74,7 +85,7 @@ def _check_choice(name: str, value, valid: tuple) -> None:
 class SolverConfig:
     block_size: int = 32
     comm: str = "zerocopy"  # "zerocopy" | "unified"
-    sched: str = "levelset"  # "levelset" | "syncfree"
+    sched: str = "levelset"  # "levelset" | "dagpart" | "syncfree"
     partition: str = "taskpool"  # "taskpool" | "contiguous" | "malleable"
     tasks_per_device: int = 8
     # None -> env/platform default; "reference"/"pallas" pick the per-op kernels
@@ -86,6 +97,12 @@ class SolverConfig:
     gemv_group: int = 0
     rhs_hint: int = 1  # expected RHS panel width R, feeds the partition cost model
     calibrate_cost: bool = False  # calibrate cost weights via hlo_cost per backend
+    # dagpart merge heuristic knobs (ignored by the other scheds):
+    # merge_width caps the busiest device's accumulated rows per merged
+    # superstep; merge_cost is the narrow-level cost threshold (0 -> the
+    # calibrated costmodel.merge_cost_threshold default)
+    merge_width: int = 64
+    merge_cost: float = 0.0
 
     def __post_init__(self):
         # Eager validation at the API boundary: a typo'd mode used to surface
@@ -95,9 +112,12 @@ class SolverConfig:
         _check_choice("partition", self.partition, STRATEGIES)
         if self.kernel_backend is not None:
             _check_choice("kernel_backend", self.kernel_backend, ops.BACKENDS)
-        for name, lo in (("block_size", 1), ("tasks_per_device", 1), ("rhs_hint", 1)):
+        for name, lo in (("block_size", 1), ("tasks_per_device", 1), ("rhs_hint", 1),
+                         ("merge_width", 1)):
             if int(getattr(self, name)) < lo:
                 raise ValueError(f"{name} must be >= {lo}, got {getattr(self, name)}")
+        if float(self.merge_cost) < 0:
+            raise ValueError(f"merge_cost must be >= 0, got {self.merge_cost}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,13 +151,20 @@ class Plan:
     # frontier can never exceed these (bulk-synchronous sweeps converge
     # level-by-level), so they cap the frontier width ladder
     frontier_caps: tuple = (1, 1)
+    # dagpart only: (n_steps+1,) level offsets of the merged supersteps —
+    # superstep s runs levels [step_off[s], step_off[s+1]) in one grid step.
+    # None (levelset/syncfree) means the identity: one superstep per level.
+    step_off: np.ndarray | None = None
 
     @property
     def n_supersteps(self) -> int:
         """Bulk-synchronous supersteps per solve. Levelset executes one
         superstep per block level; syncfree's runtime frontier discovery also
         converges level-by-level (each superstep solves exactly the rows whose
-        in-degree count completed, i.e. the next block level)."""
+        in-degree count completed, i.e. the next block level); dagpart merges
+        consecutive narrow levels, so it reports the merged step count."""
+        if self.step_off is not None:
+            return max(0, len(self.step_off) - 1)
         return self.n_levels
 
     @property
@@ -164,9 +191,9 @@ class Plan:
                 return 0
             # syncfree additionally psums the per-row in-degree counters each
             # superstep (Alg. 2's s.left_sum AND the dependency counters).
-            width = B if self.config.sched == "levelset" else B + 1
+            width = B + 1 if self.config.sched == "syncfree" else B
             return (self.bs.nb + 1) * width * itemsize * self.n_supersteps
-        if self.config.sched == "levelset":
+        if self.config.sched in LEVELSET_SCHEDS:
             # each boundary row is exchanged exactly once, before its level;
             # levels with an empty cut skip the psum entirely (width 0)
             if self.n_boundary_rows == 0:
@@ -270,14 +297,17 @@ def _build_plan(
         assert part is None, "partition reuse is not valid across reversal"
         a = reverse_transpose(a)
     bs = build_blocks(a, config.block_size)
-    if part is None:
-        cost_weights = None
-        if config.calibrate_cost and config.partition == "malleable":
-            from repro.core.costmodel import calibrate_weights
+    cost_weights = None
+    if config.calibrate_cost and (config.partition == "malleable"
+                                  or config.sched == "dagpart"):
+        # calibrated weights drive malleable placement and/or the dagpart
+        # merge pass's narrow-level threshold
+        from repro.core.costmodel import calibrate_weights
 
-            cost_weights = calibrate_weights(
-                config.block_size, backend=config.kernel_backend
-            )
+        cost_weights = calibrate_weights(
+            config.block_size, backend=config.kernel_backend
+        )
+    if part is None:
         part = make_partition(
             bs, n_devices, config.partition, config.tasks_per_device,
             cost_weights=cost_weights, cost_R=config.rhs_hint,
@@ -314,7 +344,26 @@ def _build_plan(
         [np.nonzero((tile_dev == d) & (col_lvl == t))[0] for t in range(T)] for d in range(D)
     ]
     b_rows = np.nonzero(part.boundary)[0]
-    ex_by_level = [b_rows[lvl[b_rows] == t] for t in range(T)]
+    per_level_ex = [b_rows[lvl[b_rows] == t] for t in range(T)]
+    # dagpart: coarsen the level range into merged supersteps, then hoist each
+    # merge group's exchange rows into the group's FIRST level slice — the
+    # boundary psum runs once per group, right before the merged grid step.
+    # Legal by construction: merge_levels only groups levels whose remote
+    # sources all solved in an earlier superstep.
+    step_off = None
+    if config.sched == "dagpart":
+        step_off = merge_levels(
+            bs, part, merge_width=config.merge_width,
+            merge_cost=config.merge_cost,
+            cost_weights=cost_weights, cost_R=config.rhs_hint,
+        )
+        ex_by_level = [np.zeros(0, dtype=b_rows.dtype) for _ in range(T)]
+        for k in range(len(step_off) - 1):
+            g, h = int(step_off[k]), int(step_off[k + 1])
+            ex_by_level[g] = (np.concatenate(per_level_ex[g:h])
+                              if h - g > 1 else per_level_ex[g])
+    else:
+        ex_by_level = per_level_ex
 
     # per-level required widths (max over devices for the sharded schedules)
     ws = np.array([max(rows_by[d][t].shape[0] for d in range(D)) for t in range(T)],
@@ -361,6 +410,7 @@ def _build_plan(
         transpose=transpose,
         frontier_caps=(max(1, int(ws.max())) if T else 1,
                        max(1, int(wu.max())) if T else 1),
+        step_off=step_off,
     )
 
 
@@ -406,8 +456,13 @@ def _compact_level_body(
     global max. ``ex is None`` disables the zero-copy boundary pull.
 
     Carry is ``(acc, x)``, or ``(acc, delta, x)`` with ``split_delta`` — then
-    solves read ``acc`` but tile updates land in ``delta`` (the unified
-    executor's not-yet-exchanged contributions; incompatible with ``ex``).
+    tile updates land in ``delta`` (the unified executor's not-yet-exchanged
+    contributions; incompatible with ``ex``) while solves read ``acc + delta``:
+    ``acc`` carries the psum-folded remote contributions, ``delta`` makes
+    local contributions from earlier levels of the *same* merged superstep
+    visible (dagpart runs several levels between dense exchanges). For
+    unmerged levelset supersteps ``delta`` is exactly ``+0.0`` at solve time,
+    so subtracting it is bit-inert.
     """
     assert not (split_delta and ex is not None)
     cfg = plan.config
@@ -434,9 +489,11 @@ def _compact_level_body(
                 with jax.named_scope("sptrsv.level_solve"):
                     rows = jax.lax.dynamic_slice(sr, (off[t, 0],), (w_s,))
                     safe = jnp.where(rows < 0, nb, rows)
+                    rhs = b_pad[safe] - acc[safe]
+                    if split_delta:
+                        rhs = rhs - delta[safe]
                     xs = ops.batched_block_trsv(
-                        diag[safe], b_pad[safe] - acc[safe],
-                        backend=cfg.kernel_backend
+                        diag[safe], rhs, backend=cfg.kernel_backend
                     )
                     x = x.at[safe].set(
                         jnp.where(ops.bcast_trailing(rows >= 0, xs), xs, x[safe])
@@ -472,22 +529,45 @@ def level_widths(plan: Plan) -> np.ndarray:
     return np.asarray(plan.buckets, dtype=np.int64)[plan.lvl_bucket]
 
 
+def step_offsets(plan: Plan) -> np.ndarray:
+    """(n_steps + 1,) level offsets of the plan's supersteps. Identity
+    (one level per superstep) for levelset/syncfree; the merge pass's
+    coarsening for dagpart."""
+    if plan.step_off is not None:
+        return np.asarray(plan.step_off, dtype=np.int32)
+    return np.arange(plan.n_levels + 1, dtype=np.int32)
+
+
+def step_widths(plan: Plan) -> np.ndarray:
+    """(n_steps, 3) per-superstep (solve, update, exchange) schedule widths —
+    each superstep's contiguous flat slice sums its levels' bucket widths.
+    Identical to :func:`level_widths` for unmerged plans."""
+    wid = level_widths(plan)
+    so = step_offsets(plan).astype(np.int64)
+    cs = np.zeros((plan.n_levels + 1, 3), dtype=np.int64)
+    np.cumsum(wid, axis=0, out=cs[1:])
+    return cs[so[1:]] - cs[so[:-1]]
+
+
 def fused_segments(plan: Plan) -> np.ndarray:
     """(n_seg, 2) ``[lo, hi)`` level ranges, one fused launch each.
 
     Collectives cannot live inside a Pallas kernel, so the fused executor
     splits the schedule exactly before every level whose boundary rows must be
-    combined: zerocopy breaks at levels with a non-empty exchange bucket,
-    unified (dense psum every superstep) degenerates to one segment per level,
-    and single-device / empty-cut plans fuse the whole solve into one launch.
+    combined: zerocopy breaks at levels with a non-empty exchange bucket (for
+    dagpart those are exactly the merge-group starts, so segment boundaries
+    always align to superstep boundaries), unified (dense psum every
+    superstep) degenerates to one segment per *superstep* — per level when
+    unmerged, per merge group for dagpart — and single-device / empty-cut
+    plans fuse the whole solve into one launch.
     """
     T = plan.n_levels
     if T == 0:
         return np.zeros((0, 2), dtype=np.int32)
     cfg = plan.config
     if cfg.comm == "unified" and plan.n_devices > 1 and plan.n_boundary_rows > 0:
-        lo = np.arange(T, dtype=np.int32)
-        return np.stack([lo, lo + 1], axis=1)
+        so = step_offsets(plan)
+        return np.stack([so[:-1], so[1:]], axis=1).astype(np.int32)
     wid = level_widths(plan)
     starts = [0]
     if cfg.comm == "zerocopy" and plan.n_devices > 1 and plan.n_boundary_rows > 0:
@@ -506,20 +586,34 @@ DEFAULT_STREAM_VMEM_LIMIT = 8 * 2**20  # bytes; ~half a TPU core's VMEM
 
 def stream_vmem_limit() -> int:
     """Resident-store VMEM budget (bytes) above which ``kernel_backend="fused"``
-    auto-upgrades to the streaming tile store. Override with env
-    ``REPRO_STREAM_VMEM_LIMIT`` (an int; lower it to force streaming)."""
-    return int(os.environ.get("REPRO_STREAM_VMEM_LIMIT",
-                              DEFAULT_STREAM_VMEM_LIMIT))
+    auto-upgrades to the streaming tile store.
+
+    Resolution order: the ``REPRO_STREAM_VMEM_LIMIT`` env override (an int;
+    lower it to force streaming), then the per-platform threshold calibrated
+    from the auto-tuner's probe-solve measurements
+    (:func:`repro.obs.calibration.calibrated_stream_limit` — when the store
+    holds paired fused / fused_streamed timings, the crossover moves with the
+    measured streaming overhead), then the fixed 8 MiB default."""
+    env = os.environ.get("REPRO_STREAM_VMEM_LIMIT")
+    if env is not None:
+        return int(env)
+    from repro.obs.calibration import calibrated_stream_limit
+
+    lim = calibrated_stream_limit()
+    return DEFAULT_STREAM_VMEM_LIMIT if lim is None else lim
 
 
 def stream_widths(plan: Plan) -> tuple[tuple, tuple]:
-    """Static DMA ladders: the distinct per-level (solve, update) bucket
-    widths. The streamed kernel unrolls one predicated async-copy per ladder
-    entry, so DMA start/wait always agree on the transfer size and the bytes
-    moved equal the compacted schedule footprint (no pad-to-max bursts)."""
+    """Static DMA ladders: the distinct per-*superstep* (solve, update)
+    schedule widths (:func:`step_widths` — equal to the per-level bucket
+    widths for unmerged plans; summed over a merge group for dagpart, whose
+    grid steps fetch a whole group's slice in one burst). The streamed kernel
+    unrolls one predicated async-copy per ladder entry, so DMA start/wait
+    always agree on the transfer size and the bytes moved equal the compacted
+    schedule footprint (no pad-to-max bursts)."""
     if plan.n_levels == 0:
         return (0,), (0,)
-    wid = level_widths(plan)
+    wid = step_widths(plan)
     return (tuple(sorted({int(w) for w in wid[:, 0]})),
             tuple(sorted({int(w) for w in wid[:, 1]})))
 
@@ -549,8 +643,9 @@ def fused_vmem_bytes(plan: Plan, R: int = 1, *, streamed: bool = False) -> int:
 
     Resident: the whole ``diag`` + per-device ``tiles`` stores ride in VMEM,
     so the footprint grows with the total tile count. Streamed: the stores
-    stay in HBM and only two double-buffers sized by the *widest level slice*
-    are resident. Carries (in + out windows) and the rhs are counted in both.
+    stay in HBM and only two double-buffers sized by the *widest superstep
+    slice* are resident (per level when unmerged, per merge group for
+    dagpart). Carries (in + out windows) and the rhs are counted in both.
     """
     B = plan.bs.B
     itemsize = 4
@@ -560,7 +655,7 @@ def fused_vmem_bytes(plan: Plan, R: int = 1, *, streamed: bool = False) -> int:
     vecs = (2 * n_carry + 1) * vec  # carry in + carry out windows + b_pad
     if streamed:
         if plan.n_levels:
-            wid = level_widths(plan)
+            wid = step_widths(plan)
             ws, wu = int(wid[:, 0].max()), int(wid[:, 1].max())
         else:
             ws = wu = 0
@@ -586,7 +681,7 @@ def fused_streaming(plan: Plan, R: int | None = None) -> bool:
     :func:`stream_vmem_limit` — so ``"auto"`` sessions and large plans pick
     streaming without user action. Syncfree plans never stream (the frontier
     executor has no resident tile store problem)."""
-    if plan.config.sched != "levelset":
+    if plan.config.sched not in LEVELSET_SCHEDS:
         return False
     backend = ops.executor_backend(plan.config.kernel_backend)
     if backend == "fused_streamed":
@@ -608,6 +703,13 @@ def dispatch_stats(plan: Plan) -> dict:
     executor's memory plan: whether the tile store streams from HBM, the
     estimated VMEM footprint of the selected variant, and the per-solve DMA
     traffic the streaming pays for that residency.
+
+    Scheduling columns: ``supersteps`` is the plan's bulk-synchronous step
+    count, ``supersteps_levelset`` the unmerged baseline (the block level
+    count — identical unless ``sched="dagpart"`` merged something), and
+    ``superstep_reduction`` their ratio. ``schedule_table_bytes`` is the
+    compacted-schedule footprint: every host-built table the executors
+    index (flats, offsets, buckets, stores' index maps, the step table).
     """
     wid = level_widths(plan)
     cfg = plan.config
@@ -616,15 +718,34 @@ def dispatch_stats(plan: Plan) -> dict:
     unified = (cfg.comm == "unified" and plan.n_devices > 1
                and plan.n_boundary_rows > 0)
     n_ex = (int((wid[:, 2] > 0).sum()) if has_ex
-            else (plan.n_levels if unified else 0))
+            else (plan.n_supersteps if unified else 0))
     switch = int(2 * (wid[:, 0] > 0).sum() + 2 * (wid[:, 1] > 0).sum()) + n_ex
     n_seg = int(len(fused_segments(plan)))
     streamed = fused_streaming(plan)
+    n_steps = plan.n_supersteps
     return {"switch_dispatches": switch, "fused_launches": n_seg,
             "exchanges": n_ex, "streamed": streamed,
             "fused_vmem_bytes": fused_vmem_bytes(
                 plan, plan.config.rhs_hint, streamed=streamed),
-            "stream_dma_bytes": stream_dma_bytes_per_solve(plan) if streamed else 0}
+            "stream_dma_bytes": stream_dma_bytes_per_solve(plan) if streamed else 0,
+            "supersteps": n_steps,
+            "supersteps_levelset": plan.n_levels,
+            "superstep_reduction": (plan.n_levels / n_steps) if n_steps else 1.0,
+            "schedule_table_bytes": schedule_table_bytes(plan)}
+
+
+def schedule_table_bytes(plan: Plan) -> int:
+    """Bytes of the host-built schedule tables the executors index — the
+    compacted-schedule footprint that rides to the device as jit arguments
+    (and, for the streamed kernel, bounds the scalar-prefetch SMEM traffic).
+    Merging supersteps shrinks the exchange flat (one group slice instead of
+    many per-level slices) and adds only the tiny step table."""
+    arrs = [plan.lvl_off, plan.lvl_bucket, plan.solve_rows, plan.upd_tiles,
+            plan.ex_rows, plan.ex_boundary, plan.local_rows,
+            plan.tile_row, plan.tile_col]
+    if plan.step_off is not None:
+        arrs.append(plan.step_off)
+    return int(sum(np.asarray(x).nbytes for x in arrs))
 
 
 def _fused_device_args(plan: Plan, d: int = 0):
@@ -658,14 +779,23 @@ def _fused_levelset_device_fn(plan: Plan):
     has_ex = cfg.comm == "zerocopy" and D > 1 and plan.n_boundary_rows > 0
     segs = fused_segments(plan)
     n_seg = max(1, len(segs))
-    seg_len = segs[:, 1] - segs[:, 0] if len(segs) else np.zeros(1, np.int32)
+    so = step_offsets(plan)
+    # the kernel grids over SUPERSTEPS (one level each for unmerged plans, a
+    # whole merge group for dagpart); segment boundaries always align to
+    # superstep starts, so each segment maps to a contiguous step range
+    step_of = (np.repeat(np.arange(len(so) - 1), np.diff(so))
+               if T else np.zeros(0, np.int64))
+    if len(segs):
+        s_lo = step_of[segs[:, 0]]
+        seg_len = step_of[segs[:, 1] - 1] + 1 - s_lo
+    else:
+        s_lo = seg_len = np.zeros(1, np.int64)
     grid = max(1, int(seg_len.max(initial=0)))
     wid = level_widths(plan)
     interp = ops.interpret_mode()
     streamed = fused_streaming(plan)
     sw, uw = stream_widths(plan) if streamed else ((), ())
-    seg_tab = (np.stack([segs[:, 0], seg_len], axis=1).astype(np.int32)
-               if len(segs) else np.zeros((1, 2), np.int32))
+    seg_tab = np.stack([s_lo, seg_len], axis=1).astype(np.int32)
     if has_ex and len(segs):
         # per-segment exchange width = the first level's exchange bucket
         ex_w = wid[segs[:, 0], 2]
@@ -681,6 +811,7 @@ def _fused_levelset_device_fn(plan: Plan):
         off_a = jnp.asarray(plan.lvl_off)
         wid_a = jnp.asarray(wid)
         seg_a = jnp.asarray(seg_tab)
+        stp_a = jnp.asarray(so.astype(np.int32))
         z = jnp.zeros_like(b_pad)
 
         if has_ex:
@@ -707,8 +838,8 @@ def _fused_levelset_device_fn(plan: Plan):
                 with jax.named_scope("sptrsv.superstep"):
                     return superstep_call(
                         seg_a[s], off_a, wid_a, sr, ut, trow, tcol, diag, tiles,
-                        b_pad, acc, x, delta, grid=grid, split_delta=True,
-                        interpret=interp, stream=streamed,
+                        b_pad, acc, x, delta, stp=stp_a, grid=grid,
+                        split_delta=True, interpret=interp, stream=streamed,
                         solve_widths=sw, upd_widths=uw,
                     )
             acc, x = carry
@@ -721,8 +852,8 @@ def _fused_levelset_device_fn(plan: Plan):
             with jax.named_scope("sptrsv.superstep"):
                 return superstep_call(
                     seg_a[s], off_a, wid_a, sr, ut, trow, tcol, diag, tiles,
-                    b_pad, acc, x, grid=grid, interpret=interp, stream=streamed,
-                    solve_widths=sw, upd_widths=uw,
+                    b_pad, acc, x, stp=stp_a, grid=grid, interpret=interp,
+                    stream=streamed, solve_widths=sw, upd_widths=uw,
                 )
 
         init = (z, z, z) if unified else (z, z)
@@ -758,10 +889,12 @@ def solve_local(plan: Plan, b_blocks: jax.Array) -> jax.Array:
             diag, tiles = jnp.asarray(diag_s[0]), jnp.asarray(tiles_s[0])
             sw, uw = stream_widths(plan)
         acc0 = jnp.zeros_like(b_pad)
-        seg = jnp.array([0, plan.n_levels], jnp.int32)
+        seg = jnp.array([0, plan.n_supersteps], jnp.int32)
+        stp = jnp.asarray(step_offsets(plan))
         _, x = superstep_call(
             seg, off, wid, sr, ut, trow, tcol, diag, tiles, b_pad, acc0, acc0,
-            grid=max(1, plan.n_levels), interpret=ops.interpret_mode(),
+            stp=stp, grid=max(1, plan.n_supersteps),
+            interpret=ops.interpret_mode(),
             stream=streamed, solve_widths=sw, upd_widths=uw,
         )
         return x[:nb]
@@ -811,8 +944,13 @@ def _levelset_device_fn(plan: Plan):
 
 
 def _levelset_unified_device_fn(plan: Plan):
-    """Unified-memory analogue: delta accumulators + full-array psum per level."""
-    nb, T = plan.bs.nb, plan.n_levels
+    """Unified-memory analogue: delta accumulators + full-array psum per
+    *superstep* — once per level when unmerged, once per merge group for
+    dagpart (the levels inside a group see each other's local contributions
+    through ``delta``, which solves read alongside ``acc``)."""
+    nb = plan.bs.nb
+    so = step_offsets(plan)
+    n_steps = plan.n_supersteps
 
     def fn(sr, ut, trow, tcol, tiles, owner_mask, diag, ex, b_pad):
         del ex  # unified ignores the packed exchange schedule
@@ -821,18 +959,20 @@ def _levelset_unified_device_fn(plan: Plan):
         step = _compact_level_body(
             plan, sr, ut, trow, tcol, tiles, diag, b_pad, ex=None, split_delta=True
         )
+        stp = jnp.asarray(so.astype(np.int32))
 
-        def body(t, carry):
+        def body(s, carry):
             acc_red, delta, x = carry
-            # dense exchange of everything accumulated since the last level —
-            # the page-bouncing s.left_sum traffic of Alg. 2.
+            # dense exchange of everything accumulated since the last
+            # superstep — the page-bouncing s.left_sum traffic of Alg. 2.
             with jax.named_scope("sptrsv.exchange"):
                 acc_red = acc_red + jax.lax.psum(delta, AXIS)
                 delta = jnp.zeros_like(delta)
-            return step(t, (acc_red, delta, x))
+            return jax.lax.fori_loop(stp[s], stp[s + 1], step,
+                                     (acc_red, delta, x))
 
         z = jnp.zeros_like(b_pad)
-        _, _, x = jax.lax.fori_loop(0, T, body, (z, z, z))
+        _, _, x = jax.lax.fori_loop(0, n_steps, body, (z, z, z))
         with jax.named_scope("sptrsv.gather"):
             return jax.lax.psum(x * ops.bcast_trailing(owner_mask, x), AXIS)[:nb]
 
@@ -1064,7 +1204,7 @@ class DistributedSolver:
         repl = P()
         backend = ops.executor_backend(plan.config.kernel_backend)
         self._streamed = fused_streaming(plan)
-        if plan.config.sched == "levelset":
+        if plan.config.sched in LEVELSET_SCHEDS:
             if backend in ops.FUSED_BACKENDS:
                 fn = _fused_levelset_device_fn(plan)
             else:
@@ -1090,7 +1230,7 @@ class DistributedSolver:
         self._jitted = jax.jit(mapped)
 
     def _plan_args(self, plan: Plan) -> tuple:
-        if plan.config.sched == "levelset":
+        if plan.config.sched in LEVELSET_SCHEDS:
             diag, tiles = plan.diag, plan.tiles
             if self._streamed:
                 # schedule-ordered HBM stores; recomputed here on every
@@ -1117,6 +1257,7 @@ class DistributedSolver:
                 and plan.transpose == old.transpose
                 and np.array_equal(plan.solve_rows, old.solve_rows)
                 and np.array_equal(plan.lvl_off, old.lvl_off)
+                and np.array_equal(step_offsets(plan), step_offsets(old))
                 and np.array_equal(plan.local_rows, old.local_rows)
                 and np.array_equal(plan.tile_row, old.tile_row)):
             raise ValueError(

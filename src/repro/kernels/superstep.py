@@ -14,23 +14,28 @@ The ragged compacted schedule rides in as scalar-prefetch operands (SMEM on
 TPU, available before the kernel body runs, so schedule reads never touch
 HBM):
 
-* ``seg``  ``(2,)``   — ``[first_level, n_active_levels]`` of this launch.
+* ``seg``  ``(2,)``   — ``[first_step, n_active_steps]`` of this launch.
 * ``off``  ``(T, 3)`` — per-level start offsets into the three flats.
 * ``wid``  ``(T, 3)`` — per-level bucket widths ``(w_solve, w_upd, w_ex)``.
+* ``stp``  ``(n_steps+1,)`` — level offsets of the supersteps: step ``s``
+  covers levels ``[stp[s], stp[s+1])``. Identity (``arange``) for levelset;
+  the DAG-partition merge pass's coarsening for ``sched="dagpart"``.
 * ``sr``   ``(S,)``   — flat solve rows (device-local), pad ``-1``.
 * ``ut``   ``(U,)``   — flat update tile slots (device-local), pad ``ML``.
 * ``trow``/``tcol`` ``(ML+1,)`` — per-tile destination row / source column.
 
-Grid = one program per level; program ``p`` executes level ``seg[0] + p``
-(programs beyond ``seg[1]`` are inert padding, which lets a ``fori_loop`` over
-variable-length segments reuse one traced launch). TPU grid programs run
-sequentially on a core, so the carry buffers (``acc``, ``x``, and ``delta``
-for the unified split) persist in the output windows across levels — level
-``t+1`` reads the partial sums level ``t`` wrote without any HBM round-trip.
-Program 0 copies the incoming carries into the output windows (one copy per
-launch; see the aliasing note in :func:`superstep_call`).
+Grid = one program per *superstep*; program ``p`` executes the levels of step
+``seg[0] + p`` in order (programs beyond ``seg[1]`` are inert padding, which
+lets a ``fori_loop`` over variable-length segments reuse one traced launch).
+A merged step's levels run back-to-back inside one program — the sequential
+rowsweep is exactly what makes intra-step dependencies legal. TPU grid
+programs run sequentially on a core, so the carry buffers (``acc``, ``x``,
+and ``delta`` for the unified split) persist in the output windows across
+steps — step ``s+1`` reads the partial sums step ``s`` wrote without any HBM
+round-trip. Program 0 copies the incoming carries into the output windows
+(one copy per launch; see the aliasing note in :func:`superstep_call`).
 
-Each program walks its level's slice of the schedule with in-kernel loops
+Each program walks its levels' slices of the schedule with in-kernel loops
 bounded by the *bucket width* (dynamic trip counts, so a 3-row level costs a
 width-4 loop, not the global max): per row a dense forward substitution of the
 diagonal tile, then per tile a ``(B,B)@(B[,R])`` MXU product accumulated into
@@ -52,13 +57,14 @@ specs): fine while ``diag``/``tiles`` fit VMEM, but the footprint grows with
 the *total* tile count, which caps the matrix sizes the fused hot path can
 serve. The **streamed** variant (``stream=True``) is the production-scale
 path: ``diag``/``tiles`` arrive *schedule-ordered* (level ``t``'s slice is
-contiguous at ``off[t]`` — exactly the compacted flat layout) and live in
-``ANY``/HBM; each grid program double-buffers its level's slices into two
-VMEM scratch buffers with async DMA, prefetching level ``t+1`` while level
-``t`` computes. VMEM residency then scales with the *widest level slice*
-(``max(w_solve)``/``max(w_upd)`` over the bucketized level table), not the
-total tile store, and the DMA engine sees exactly one contiguous burst per
-level per store. The DMA sizes branch over the distinct bucket widths (a
+contiguous at ``off[t]`` — exactly the compacted flat layout, so a merged
+step's slice is contiguous too) and live in ``ANY``/HBM; each grid program
+double-buffers its step's slices into two VMEM scratch buffers with async
+DMA, prefetching step ``s+1`` while step ``s`` computes. VMEM residency then
+scales with the *widest superstep slice* (max summed widths over the step
+table), not the total tile store, and the DMA engine sees exactly one
+contiguous burst per step per store. The DMA sizes branch over the distinct
+step widths (a
 static ladder of ≤ ``MAX_BUCKETS`` sizes), so the bytes moved per solve equal
 the compacted schedule footprint — no pad-to-max traffic. The in-kernel
 arithmetic is shared with the resident variant op-for-op, so streamed,
@@ -73,7 +79,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-N_PREFETCH = 7  # seg, off, wid, sr, ut, trow, tcol
+N_PREFETCH = 8  # seg, off, wid, stp, sr, ut, trow, tcol
 
 # Trace-time record of the most recent streamed launch's VMEM scratch shapes
 # (diag_buf/tile_buf) — lets tests assert the streaming contract (buffers
@@ -85,8 +91,9 @@ LAST_STREAM_ALLOC: dict = {}
 def stream_scratch_shapes(solve_widths: tuple, upd_widths: tuple, B: int
                           ) -> tuple[tuple, tuple]:
     """The streaming kernel's VMEM scratch allocation rule: double-buffered
-    slices sized by the widest entry of each DMA ladder (``(2, W, B, B)`` per
-    store, never the total store size). This is the single source shared by
+    slices sized by the widest entry of each DMA ladder — the distinct
+    per-superstep widths — (``(2, W, B, B)`` per store, never the total store
+    size). This is the single source shared by
     :func:`superstep_call` and the static plan verifier
     (``repro.verify.contracts``), so the lint checks the allocation the kernel
     actually performs rather than a re-derivation of it."""
@@ -137,7 +144,7 @@ def _solve_tile_panel(L, rhs):
 
 
 def _superstep_kernel(
-    seg_ref, off_ref, wid_ref, sr_ref, ut_ref, trow_ref, tcol_ref,
+    seg_ref, off_ref, wid_ref, stp_ref, sr_ref, ut_ref, trow_ref, tcol_ref,
     diag_ref, tiles_ref, b_ref, *io_refs, multi: bool, split_delta: bool,
     stream: bool = False, solve_widths: tuple = (), upd_widths: tuple = (),
 ):
@@ -146,9 +153,10 @@ def _superstep_kernel(
     Resident: ``diag_ref``/``tiles_ref`` are whole VMEM arrays indexed by row
     / tile slot. Streamed: they are *schedule-ordered* HBM (``ANY``) stores —
     slot ``k`` of the solve/update flats corresponds to entry ``k`` — and each
-    level's contiguous slice is DMA'd into the double-buffered VMEM scratch
-    (``dbuf``/``tbuf``) at its exact bucket width (one ``pl.when`` branch per
-    distinct width in the static ladder, so start/wait always agree on size).
+    superstep's contiguous slice is DMA'd into the double-buffered VMEM
+    scratch (``dbuf``/``tbuf``) at its exact summed width (one ``pl.when``
+    branch per distinct width in the static ladder, so start/wait always
+    agree on size).
     """
     if stream:
         *io_refs, dbuf, tbuf, dsem, tsem = io_refs
@@ -166,80 +174,106 @@ def _superstep_kernel(
         if split_delta:
             delta_ref[...] = delta_in[...]
 
-    t = seg_ref[0] + p
+    s = seg_ref[0] + p
     slot = jax.lax.rem(p, 2)
 
     if stream:
 
-        def _level_copies(q, s):
-            """(predicate, async_copy) pairs moving level ``seg[0]+q``'s
-            schedule slices into scratch slot ``s`` — one candidate per
-            distinct bucket width, predicated on the level's actual width."""
-            tq = seg_ref[0] + q
+        def _step_copies(q, sl):
+            """(predicate, async_copy) pairs moving superstep ``seg[0]+q``'s
+            schedule slices into scratch slot ``sl``. A step's levels are
+            consecutive in the flats, so one burst per store covers the whole
+            merge group; one candidate per distinct per-step summed width,
+            predicated on the step's actual total."""
+            sq = seg_ref[0] + q
+            t0 = stp_ref[sq]
+            t1 = stp_ref[sq + 1] - 1  # last level of the step (steps non-empty)
+            wsq = off_ref[t1, 0] + wid_ref[t1, 0] - off_ref[t0, 0]
+            wuq = off_ref[t1, 1] + wid_ref[t1, 1] - off_ref[t0, 1]
             for w in solve_widths:
                 if w > 0:
-                    yield wid_ref[tq, 0] == w, pltpu.make_async_copy(
-                        diag_ref.at[pl.ds(off_ref[tq, 0], w)],
-                        dbuf.at[s, pl.ds(0, w)], dsem.at[s])
+                    yield wsq == w, pltpu.make_async_copy(
+                        diag_ref.at[pl.ds(off_ref[t0, 0], w)],
+                        dbuf.at[sl, pl.ds(0, w)], dsem.at[sl])
             for w in upd_widths:
                 if w > 0:
-                    yield wid_ref[tq, 1] == w, pltpu.make_async_copy(
-                        tiles_ref.at[pl.ds(off_ref[tq, 1], w)],
-                        tbuf.at[s, pl.ds(0, w)], tsem.at[s])
+                    yield wuq == w, pltpu.make_async_copy(
+                        tiles_ref.at[pl.ds(off_ref[t0, 1], w)],
+                        tbuf.at[sl, pl.ds(0, w)], tsem.at[sl])
 
         @pl.when(jnp.logical_and(p == 0, seg_ref[1] > 0))
-        def _():  # warm-up: this launch's first level has no predecessor
-            for pred, cp in _level_copies(0, 0):
+        def _():  # warm-up: this launch's first step has no predecessor
+            for pred, cp in _step_copies(0, 0):
                 pl.when(pred)(cp.start)
 
         @pl.when(p + 1 < seg_ref[1])
-        def _():  # prefetch the next level into the other slot while computing
-            for pred, cp in _level_copies(p + 1, jax.lax.rem(p + 1, 2)):
+        def _():  # prefetch the next step into the other slot while computing
+            for pred, cp in _step_copies(p + 1, jax.lax.rem(p + 1, 2)):
                 pl.when(pred)(cp.start)
 
     @pl.when(p < seg_ref[1])
     def _():
-        if stream:  # this level's slices must have landed before compute
-            for pred, cp in _level_copies(p, slot):
+        if stream:  # this step's slices must have landed before compute
+            for pred, cp in _step_copies(p, slot):
                 pl.when(pred)(cp.wait)
 
-        # --- solve this level's owned rows (dynamic trip = bucket width) ---
-        o_s = off_ref[t, 0]
+        t_lo = stp_ref[s]
+        # streamed scratch holds the whole step slice; level t's entries sit
+        # at (off[t] - base) within it
+        base_s = off_ref[t_lo, 0]
+        base_u = off_ref[t_lo, 1]
 
-        def solve_one(i, carry):
-            r = sr_ref[o_s + i]
+        def micro(t, carry):
+            # --- solve level t's owned rows (dynamic trip = bucket width) ---
+            o_s = off_ref[t, 0]
 
-            @pl.when(r >= 0)
-            def _():
-                L = dbuf[slot, i] if stream else diag_ref[r]
-                rhs = b_ref[r] - acc_ref[r]
-                x_ref[r] = _solve_tile_panel(L, rhs) if multi else _solve_tile(L, rhs)
+            def solve_one(i, c):
+                r = sr_ref[o_s + i]
 
+                @pl.when(r >= 0)
+                def _():
+                    L = dbuf[slot, o_s - base_s + i] if stream else diag_ref[r]
+                    rhs = b_ref[r] - acc_ref[r]
+                    if split_delta:
+                        # earlier levels of this merged step accumulated local
+                        # contributions into delta (not yet psum-folded into
+                        # acc) — intra-step dependencies read them here. For
+                        # an unmerged step delta is exactly +0.0: bit-inert.
+                        rhs = rhs - delta_ref[r]
+                    x_ref[r] = (_solve_tile_panel(L, rhs) if multi
+                                else _solve_tile(L, rhs))
+
+                return c
+
+            jax.lax.fori_loop(0, wid_ref[t, 0], solve_one, 0)
+
+            # --- owned-tile updates sourced at level t ---
+            o_u = off_ref[t, 1]
+
+            def upd_one(j, c):
+                tid = ut_ref[o_u + j]
+                # keep the MXU product a standalone dot on materialized
+                # operands: letting XLA fuse the gathers or the accumulate
+                # into the dot changes its reduction codegen by 1 ulp vs the
+                # batched per-op kernels, breaking switch-executor
+                # bit-exactness
+                tile, xv = jax.lax.optimization_barrier(
+                    (tbuf[slot, o_u - base_u + j] if stream else tiles_ref[tid],
+                     x_ref[tcol_ref[tid]])
+                )
+                prod = jax.lax.optimization_barrier(
+                    jnp.dot(tile, xv, preferred_element_type=tile.dtype)
+                )
+                rd = trow_ref[tid]
+                delta_ref[rd] = delta_ref[rd] + prod
+                return c
+
+            jax.lax.fori_loop(0, wid_ref[t, 1], upd_one, 0)
             return carry
 
-        jax.lax.fori_loop(0, wid_ref[t, 0], solve_one, 0)
-
-        # --- owned-tile updates sourced at this level ---
-        o_u = off_ref[t, 1]
-
-        def upd_one(j, carry):
-            tid = ut_ref[o_u + j]
-            # keep the MXU product a standalone dot on materialized operands:
-            # letting XLA fuse the gathers or the accumulate into the dot
-            # changes its reduction codegen by 1 ulp vs the batched per-op
-            # kernels, breaking switch-executor bit-exactness
-            tile, xv = jax.lax.optimization_barrier(
-                (tbuf[slot, j] if stream else tiles_ref[tid],
-                 x_ref[tcol_ref[tid]])
-            )
-            prod = jax.lax.optimization_barrier(
-                jnp.dot(tile, xv, preferred_element_type=tile.dtype)
-            )
-            rd = trow_ref[tid]
-            delta_ref[rd] = delta_ref[rd] + prod
-            return carry
-
-        jax.lax.fori_loop(0, wid_ref[t, 1], upd_one, 0)
+        # run the step's levels in order inside this one grid program — the
+        # sequential rowsweep makes intra-step dependencies legal
+        jax.lax.fori_loop(t_lo, stp_ref[s + 1], micro, 0)
 
 
 @functools.partial(
@@ -248,7 +282,7 @@ def _superstep_kernel(
                      "solve_widths", "upd_widths"),
 )
 def superstep_call(
-    seg: jax.Array,  # (2,) int32 [first_level, n_active_levels]
+    seg: jax.Array,  # (2,) int32 [first_step, n_active_steps]
     off: jax.Array,  # (T, 3) int32 level offsets into the flats
     wid: jax.Array,  # (T, 3) int32 level bucket widths
     sr: jax.Array,  # (S,) int32 flat solve rows, pad -1
@@ -261,6 +295,7 @@ def superstep_call(
     acc: jax.Array,
     x: jax.Array,
     delta: jax.Array | None = None,
+    stp: jax.Array | None = None,  # (n_steps+1,) int32 superstep level offsets
     *,
     grid: int,
     split_delta: bool = False,
@@ -269,26 +304,33 @@ def superstep_call(
     solve_widths: tuple = (),
     upd_widths: tuple = (),
 ):
-    """One fused launch executing ``grid`` levels starting at ``seg[0]``.
+    """One fused launch executing ``grid`` supersteps starting at ``seg[0]``.
 
-    Returns the updated ``(acc, x)`` carry, or ``(acc, delta, x)`` when
-    ``split_delta`` (the unified executor's not-yet-exchanged contributions
-    accumulate in ``delta`` while solves read ``acc``).
+    ``stp`` is the superstep→level offset table; ``None`` means the identity
+    (one level per superstep — the plain levelset schedule). Returns the
+    updated ``(acc, x)`` carry, or ``(acc, delta, x)`` when ``split_delta``
+    (the unified executor's not-yet-exchanged contributions accumulate in
+    ``delta``; solves read ``acc + delta`` so later levels of a merged
+    superstep see the earlier levels' local contributions).
 
     With ``stream=True`` the ``diag``/``tiles`` operands are the
     *schedule-ordered* stores (``core.solver.streamed_stores``): they stay in
-    ``ANY``/HBM and each level's contiguous slice is double-buffered into
-    VMEM scratch sized by the max bucket width in ``solve_widths`` /
-    ``upd_widths`` (the static ladder of distinct per-level widths).
+    ``ANY``/HBM and each superstep's contiguous slice is double-buffered into
+    VMEM scratch sized by the max width in ``solve_widths`` / ``upd_widths``
+    (the static ladder of distinct per-step summed widths).
     """
     multi = b_pad.ndim == 3
     assert (delta is not None) == split_delta
     if off.shape[0] == 0:
         # empty schedule (0-level plan): every program is inert, but the
         # kernel still traces reads of the level tables — give them one
-        # zero row so those (never-executed) reads stay in bounds
+        # zero row (and a two-entry zero step table) so those
+        # (never-executed) reads stay in bounds
         off = jnp.zeros((1, 3), jnp.int32)
         wid = jnp.zeros((1, 3), jnp.int32)
+        stp = jnp.zeros((2,), jnp.int32)
+    if stp is None:
+        stp = jnp.arange(off.shape[0] + 1, dtype=jnp.int32)
     carry_in = (acc, delta, x) if split_delta else (acc, x)
     n_carry = len(carry_in)
 
@@ -340,7 +382,8 @@ def superstep_call(
         interpret=interpret,
     )(
         seg.astype(jnp.int32), off.astype(jnp.int32), wid.astype(jnp.int32),
-        sr.astype(jnp.int32), ut.astype(jnp.int32), trow.astype(jnp.int32),
-        tcol.astype(jnp.int32), diag, tiles, b_pad, *carry_in,
+        stp.astype(jnp.int32), sr.astype(jnp.int32), ut.astype(jnp.int32),
+        trow.astype(jnp.int32), tcol.astype(jnp.int32), diag, tiles, b_pad,
+        *carry_in,
     )
     return out

@@ -35,7 +35,15 @@ def main() -> None:
     ap.add_argument("--comm", default="zerocopy",
                     choices=["zerocopy", "unified", "auto"])
     ap.add_argument("--sched", default="levelset",
-                    choices=["levelset", "syncfree", "auto"])
+                    choices=["levelset", "dagpart", "syncfree", "auto"],
+                    help="'dagpart' merges runs of narrow levels into single "
+                         "supersteps (fewer launches/exchanges on chain-heavy "
+                         "factors); tune with --merge-width/--merge-cost")
+    ap.add_argument("--merge-width", type=int, default=64,
+                    help="dagpart: per-device row budget of a merged superstep")
+    ap.add_argument("--merge-cost", type=float, default=0.0,
+                    help="dagpart: busiest-device cost below which a level "
+                         "counts as narrow (0 = calibrated threshold)")
     ap.add_argument("--partition", default="taskpool",
                     choices=list(partition_strategies.STRATEGIES))
     ap.add_argument("--tasks-per-device", type=int, default=8)
@@ -86,6 +94,7 @@ def main() -> None:
         block_size=args.block_size, comm=args.comm, sched=args.sched,
         partition=args.partition, tasks_per_device=args.tasks_per_device,
         kernel=args.kernel, rhs_hint=args.rhs_hint,
+        merge_width=args.merge_width, merge_cost=args.merge_cost,
         calibrate_cost=args.calibrate_cost, probe_solves=args.probe,
     )
     ctx = SpTRSVContext(mesh=mesh, options=opts)
@@ -113,15 +122,22 @@ def main() -> None:
         print(f"[solve] auto: sched={sched} comm={comm} kernel={kernel} "
               f"({handle.auto.mode}, probe-overhead "
               f"{handle.auto.probe_overhead_us/1e3:.1f}ms)")
-    if cfg.sched == "levelset":
+    if cfg.sched in ("levelset", "dagpart"):
         stream_note = (f" dma/solve={ds['stream_dma_bytes']/1e3:.0f}KB"
                        if ds["streamed"] else "")
+        merge_note = ""
+        if cfg.sched == "dagpart":
+            merge_note = (f" supersteps={ds['supersteps']}"
+                          f"/{ds['supersteps_levelset']} "
+                          f"({ds['superstep_reduction']:.1f}x fewer)")
         print(f"[solve] kernel={backend} "
               f"fused-launches={ds['fused_launches']} "
               f"switch-dispatches={ds['switch_dispatches']} "
               f"exchanges={ds['exchanges']} "
               f"streamed={ds['streamed']} "
-              f"vmem={ds['fused_vmem_bytes']/1e6:.2f}MB{stream_note}")
+              f"vmem={ds['fused_vmem_bytes']/1e6:.2f}MB "
+              f"sched-table={ds['schedule_table_bytes']/1e3:.1f}KB"
+              f"{stream_note}{merge_note}")
     else:
         print(f"[solve] kernel={backend} "
               f"frontier-caps={plan.frontier_caps}")

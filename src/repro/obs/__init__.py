@@ -19,6 +19,7 @@ off, and toggling it cannot retrace a compiled executor.
 """
 from repro.obs.calibration import (
     CalibrationStore,
+    calibrated_stream_limit,
     fitted_weights,
     get_store,
     probe_signature,
@@ -41,7 +42,8 @@ from repro.obs.trace import (
 )
 
 __all__ = [
-    "CalibrationStore", "fitted_weights", "get_store", "probe_signature",
+    "CalibrationStore", "calibrated_stream_limit", "fitted_weights",
+    "get_store", "probe_signature",
     "set_store", "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "get_registry", "record_plan_metrics", "NULL_TRACER", "Tracer",
     "configure_tracing", "get_tracer", "trace_to",

@@ -111,6 +111,11 @@ class CalibrationStore:
         with self._lock:
             return dict(self._samples.get(self._key(backend, B), {}))
 
+    def sample_groups(self) -> dict[str, dict]:
+        """Snapshot of every ``"backend/B##" -> {sig: sample}`` group."""
+        with self._lock:
+            return {k: dict(v) for k, v in self._samples.items()}
+
     def n_samples(self) -> int:
         with self._lock:
             return sum(len(v) for v in self._samples.values())
@@ -223,6 +228,62 @@ def _solve_ls(A: np.ndarray, y: np.ndarray) -> np.ndarray | None:
     if not np.all(np.isfinite(w)):
         return None
     return w
+
+
+# -- streamed/resident crossover --------------------------------------------
+
+STREAM_LIMIT_FLOOR = 1 * 2**20  # never push the crossover below 1 MiB
+STREAM_LIMIT_CEIL = 64 * 2**20  # or keep tiles resident above 64 MiB
+
+
+def _unit_cost(samples: list) -> float | None:
+    """Median measured microseconds per schedule work unit (su + tu)."""
+    units = np.array([s["su"] + s["tu"] for s in samples], dtype=np.float64)
+    us = np.array([s["us"] for s in samples], dtype=np.float64)
+    ok = np.isfinite(us) & (us > 0) & (units > 0)
+    if not np.any(ok):
+        return None
+    return float(np.median(us[ok] / units[ok]))
+
+
+def calibrated_stream_limit(store: CalibrationStore | None = None) -> int | None:
+    """Measured streamed/resident VMEM crossover in bytes, or ``None``.
+
+    The auto-tuner's probe solves time the same compacted schedules under
+    both the resident (``fused``) and DMA double-buffered
+    (``fused_streamed``) executors; their per-work-unit wall-clock ratio is
+    a direct platform measurement of what streaming actually costs. When
+    streaming is nearly free (ratio ~1) the resident store stops paying for
+    its VMEM and the crossover should drop; when the DMA bursts are slow the
+    crossover rises. The fixed 8 MiB default
+    (:data:`repro.core.solver.DEFAULT_STREAM_VMEM_LIMIT`) is scaled by the
+    median ratio across block sizes with samples for *both* executors,
+    clamped to ``[1 MiB, 64 MiB]``. Returns ``None`` when no block size has
+    paired samples — callers keep the fixed default, so unprobed sessions
+    behave exactly as before. Env ``REPRO_STREAM_VMEM_LIMIT`` overrides both
+    (handled by :func:`repro.core.solver.stream_vmem_limit`).
+    """
+    groups = (store or get_store()).sample_groups()
+    fused: dict[str, list] = {}
+    streamed: dict[str, list] = {}
+    for key, sig_map in groups.items():
+        backend, _, b_tag = key.partition("/")
+        if backend == "fused":
+            fused.setdefault(b_tag, []).extend(sig_map.values())
+        elif backend == "fused_streamed":
+            streamed.setdefault(b_tag, []).extend(sig_map.values())
+    ratios = []
+    for b_tag in sorted(set(fused) & set(streamed)):
+        cf = _unit_cost(fused[b_tag])
+        cs = _unit_cost(streamed[b_tag])
+        if cf is not None and cs is not None and cf > 0:
+            ratios.append(cs / cf)
+    if not ratios:
+        return None
+    from repro.core.solver import DEFAULT_STREAM_VMEM_LIMIT
+
+    lim = DEFAULT_STREAM_VMEM_LIMIT * float(np.median(ratios))
+    return int(np.clip(lim, STREAM_LIMIT_FLOOR, STREAM_LIMIT_CEIL))
 
 
 # -- global store ----------------------------------------------------------

@@ -46,7 +46,14 @@ Rule catalogue (``kc.*``; all errors unless noted):
 * ``kc.segments.partition`` — fused segments partition ``[0, T)`` in order,
   and every level whose exchange bucket is non-empty *starts* a segment
   (the fused executor psums only at segment starts; an exchange level in
-  mid-segment would silently skip its psum).
+  mid-segment would silently skip its psum). For merged (``dagpart``)
+  plans, every segment boundary must additionally sit on a superstep
+  boundary — the fused executor grids over *steps*, so a segment split
+  mid-group would misalign the grid against the step table.
+* ``kc.steps.partition`` — when a merged step table (``plan.step_off``) is
+  present it must partition ``[0, T)``: start at 0, increase strictly, end
+  at T. Executors index schedules through it; a malformed table reads
+  wrong-but-in-bounds slices, silently.
 """
 from __future__ import annotations
 
@@ -67,17 +74,50 @@ def _widths(plan: "Plan") -> np.ndarray:
     return np.asarray(plan.buckets, dtype=np.int64)[bid]
 
 
+def _valid_step_off(plan: "Plan") -> np.ndarray | None:
+    """``plan.step_off`` as a validated int64 array (identity for unmerged
+    plans), or ``None`` when the table cannot partition ``[0, T)`` —
+    downstream checks must then skip step-granular derivations rather than
+    cascade off bad data (``kc.steps.partition`` owns the finding)."""
+    T = plan.n_levels
+    if plan.step_off is None:
+        return np.arange(T + 1, dtype=np.int64)
+    so = np.asarray(plan.step_off, dtype=np.int64).ravel()
+    if (so.size < 1 or int(so[0]) != 0 or int(so[-1]) != T
+            or (so.size > 1 and np.any(np.diff(so) <= 0))):
+        return None
+    return so
+
+
 def check_contracts(plan: "Plan", sink: RuleSink) -> None:
     _check_offsets(plan, sink)
+    steps_ok = _check_steps(plan, sink)
     ids_ok = _check_buckets(plan, sink)
     _check_pad_inert(plan, sink)
     _check_donation(sink)
     # the segment/streaming helpers index `buckets` with `lvl_bucket`
     # unclamped (the builders guarantee validity); once kc.buckets.fit has
-    # flagged a corrupt id there is nothing sound left to derive from them
-    if plan.config.sched == "levelset" and ids_ok:
+    # flagged a corrupt id — or kc.steps.partition a corrupt step table —
+    # there is nothing sound left to derive from them
+    if plan.config.sched in ("levelset", "dagpart") and ids_ok and steps_ok:
         _check_segments(plan, sink)
         _check_streaming(plan, sink)
+
+
+def _check_steps(plan: "Plan", sink: RuleSink) -> bool:
+    sink.check("kc.steps.partition")
+    if plan.step_off is None:
+        return True
+    if _valid_step_off(plan) is None:
+        so = np.asarray(plan.step_off).ravel()
+        sink.fail(
+            "kc.steps.partition",
+            f"step_off {so.tolist()} does not partition [0, {plan.n_levels}) "
+            "into merged supersteps (must start at 0, increase strictly, and "
+            f"end at {plan.n_levels})",
+        )
+        return False
+    return True
 
 
 def _check_offsets(plan: "Plan", sink: RuleSink) -> None:
@@ -148,7 +188,20 @@ def _check_buckets(plan: "Plan", sink: RuleSink) -> bool:
             need[:, 1] = np.maximum(need[:, 1], cnt)
     b_rows = np.nonzero(part.boundary)[0]
     if b_rows.size:
-        need[:, 2] = np.bincount(lvl[b_rows], minlength=T)[:T]
+        exn = np.bincount(lvl[b_rows], minlength=T)[:T]
+        if plan.config.sched == "dagpart" and plan.step_off is not None:
+            so = _valid_step_off(plan)
+            if so is None:
+                exn = np.zeros(T, dtype=np.int64)  # kc.steps owns the finding
+            else:
+                # the builder hoists each merge group's exchange rows into
+                # the group's first micro-level: the need is per *group*,
+                # carried entirely by its start level
+                cs = np.concatenate([[0], np.cumsum(exn)])
+                hoisted = np.zeros(T, dtype=np.int64)
+                hoisted[so[:-1]] = cs[so[1:]] - cs[so[:-1]]
+                exn = hoisted
+        need[:, 2] = exn
     names = ("solve", "update", "exchange")
     for col, name in enumerate(names):
         short = np.nonzero(wid[:, col] < need[:, col])[0]
@@ -225,6 +278,21 @@ def _check_segments(plan: "Plan", sink: RuleSink) -> None:
             "in order",
         )
         return
+    if plan.config.sched == "dagpart":
+        # the fused executor grids over merged steps: a segment boundary
+        # inside a merge group would shear the grid against the step table
+        so = _valid_step_off(plan)
+        bounds = set() if so is None else {int(v) for v in so}
+        for lo, hi in segs:
+            for edge in (int(lo), int(hi)):
+                if edge not in bounds:
+                    sink.fail(
+                        "kc.segments.partition",
+                        f"fused segment edge {edge} splits a merged "
+                        "superstep (segment boundaries must sit on "
+                        f"step_off boundaries {sorted(bounds)})",
+                        level=edge if edge < T else None,
+                    )
     if (plan.config.comm == "zerocopy" and plan.n_devices > 1
             and plan.n_boundary_rows > 0):
         wid = _widths(plan)
@@ -250,15 +318,27 @@ def _check_streaming(plan: "Plan", sink: RuleSink) -> None:
     B = plan.bs.B
     T = plan.n_levels
     wid = _widths(plan)
+    # the streamed kernel DMAs one burst per merged superstep, spanning the
+    # step's whole contiguous run of level slices — ladders and scratch are
+    # therefore sized against per-*step* summed widths (identical to the
+    # per-level widths for unmerged plans)
+    so = _valid_step_off(plan)
+    if so is None:  # pragma: no cover - gated by kc.steps.partition upstream
+        return
+    cs = np.zeros((T + 1, 3), dtype=np.int64)
+    if T:
+        np.cumsum(wid, axis=0, out=cs[1:])
+    swid = cs[so[1:]] - cs[so[:-1]]
+    n_steps = swid.shape[0]
     sw, uw = stream_widths(plan)
     for name, lad, col in (("solve", sw, 0), ("update", uw, 1)):
-        actual = ({int(w) for w in wid[:, col]} if T else {0})
+        actual = ({int(w) for w in swid[:, col]} if n_steps else {0})
         if set(lad) != actual:
             sink.fail(
                 "kc.stream.ladder",
-                f"{name} DMA ladder {sorted(lad)} != distinct level widths "
-                f"{sorted(actual)} (a width outside the ladder moves no "
-                "data; a stale entry pairs a DMA start with no wait)",
+                f"{name} DMA ladder {sorted(lad)} != distinct superstep "
+                f"widths {sorted(actual)} (a width outside the ladder moves "
+                "no data; a stale entry pairs a DMA start with no wait)",
             )
 
     diag_sched, tiles_sched = streamed_stores(plan)
@@ -308,10 +388,10 @@ def _check_streaming(plan: "Plan", sink: RuleSink) -> None:
         )
 
     dshape, tshape = stream_scratch_shapes(sw, uw, B)
-    want_d = (2, max([int(w) for w in wid[:, 0] if w > 0] or [1]) if T else 1,
-              B, B)
-    want_t = (2, max([int(w) for w in wid[:, 1] if w > 0] or [1]) if T else 1,
-              B, B)
+    want_d = (2, max([int(w) for w in swid[:, 0] if w > 0] or [1])
+              if n_steps else 1, B, B)
+    want_t = (2, max([int(w) for w in swid[:, 1] if w > 0] or [1])
+              if n_steps else 1, B, B)
     if T == 0:
         want_d = want_t = (2, 1, B, B)
     for name, got, want in (("diag", dshape, want_d), ("tile", tshape, want_t)):

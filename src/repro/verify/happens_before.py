@@ -8,9 +8,11 @@ dependency. The semantics are **positional**, not level-identity: a tile
 update scheduled in superstep ``t`` is legal whenever its source row's solve
 lands in an earlier superstep *or earlier in the same superstep* (solves
 precede updates inside one fused/switch superstep body) — exactly the
-legality condition a future DAG-partition scheduler that merges levels must
-still satisfy, which is what makes this module the reusable legality oracle
-the ROADMAP's "beyond levelsets" item needs.
+legality condition the DAG-partition scheduler (``sched="dagpart"``) must
+satisfy when it merges levels, which is what makes this module the legality
+oracle gating that scheduler: merged plans replay through the *same* walks
+(micro-level in-superstep order is exactly the kernel's sequential rowsweep),
+plus one merged-step-specific rule for unified comm below.
 
 Executor timeline being modelled (one superstep ``t``, all executors):
 
@@ -32,7 +34,15 @@ Rule catalogue (``hb.*``; all errors unless noted):
   superstep, or earlier in in-superstep order (solves-before-updates).
 * ``hb.upd.dest-after`` — a tile update lands strictly before its
   destination row's solve (same-superstep is a race: the superstep body
-  solves *before* updating, so the contribution would be lost).
+  solves *before* updating, so the contribution would be lost). For merged
+  (``dagpart``) plans "superstep" here means micro-level: the in-kernel
+  rowsweep runs each merged micro-level's solves before its updates.
+* ``hb.upd.dest-step`` — merged plans under ``comm="unified"`` only: a
+  *cross-device* tile update must land in a strictly earlier merged
+  superstep than its destination row's solve. The unified executor folds
+  the cross-device delta into ``acc`` only at superstep boundaries, so a
+  remote contribution computed in the same merged step as the destination
+  solve — even at an earlier micro-level — never reaches the owner.
 * ``hb.exchange.gate`` / ``hb.exchange.missing`` / ``hb.exchange.once`` /
   ``hb.exchange.position`` — every cross-device dependency is covered by an
   exchange that executes after the last remote update into the row and no
@@ -94,6 +104,21 @@ def _level_slices(plan: "Plan", col: int, flat_len: int) -> list:
     return out
 
 
+def _step_of_levels(plan: "Plan") -> np.ndarray | None:
+    """Micro-level -> merged-superstep map from ``plan.step_off``; identity
+    for unmerged plans. ``None`` when the table is malformed — the
+    kernel-contract lint (``kc.steps.partition``) owns that finding, and the
+    ordering walk must not cascade noise off unusable data."""
+    T = plan.n_levels
+    if plan.step_off is None:
+        return np.arange(T, dtype=np.int64)
+    so = np.asarray(plan.step_off).ravel()
+    if (so.size < 1 or int(so[0]) != 0 or int(so[-1]) != T
+            or (so.size > 1 and np.any(np.diff(so) <= 0))):
+        return None
+    return np.repeat(np.arange(so.size - 1, dtype=np.int64), np.diff(so))
+
+
 def check_happens_before(plan: "Plan", sink: RuleSink) -> None:
     bs, part, cfg = plan.bs, plan.part, plan.config
     nb, D = bs.nb, plan.n_devices
@@ -125,7 +150,7 @@ def check_happens_before(plan: "Plan", sink: RuleSink) -> None:
     tile_of = {(int(r), int(c)): i
                for i, (r, c) in enumerate(zip(off_rows, off_cols))}
 
-    if cfg.sched == "levelset":
+    if cfg.sched in ("levelset", "dagpart"):
         solve_level = _check_levelset_solves(plan, sink, owner)
         upd_level = _check_levelset_updates(plan, sink, owner, tile_of)
         _check_ordering(plan, sink, solve_level, upd_level, tile_of)
@@ -147,7 +172,7 @@ def check_happens_before(plan: "Plan", sink: RuleSink) -> None:
                 "dependency cut (every update is device-local)",
                 severity=WARNING,
             )
-        if cfg.sched == "levelset" and all(
+        if cfg.sched in ("levelset", "dagpart") and all(
                 0 <= int(b) < len(plan.buckets) for b in plan.lvl_bucket):
             from repro.core.solver import fused_segments
 
@@ -342,6 +367,36 @@ def _check_ordering(plan: "Plan", sink: RuleSink, solve_level: dict,
                 f"destination row {r} solves in superstep {tr} "
                 "(solves precede updates inside a superstep, so the "
                 "contribution is lost)", level=t, tiles=[(r, c)],
+            )
+
+    # merged steps under unified comm: the dense delta psum folds into acc
+    # only at superstep *boundaries*, so a cross-device update must complete
+    # in a strictly earlier merged step than its destination's solve — the
+    # micro-level ordering above is not enough once levels share a step
+    cfg = plan.config
+    if not (cfg.sched == "dagpart" and cfg.comm == "unified"
+            and plan.n_devices > 1):
+        return
+    step_of = _step_of_levels(plan)
+    if step_of is None:
+        return  # malformed step table: kc.steps.partition owns this
+    sink.check("hb.upd.dest-step")
+    owner = np.asarray(plan.part.owner)
+    for (r, c), t in upd_level.items():
+        if int(owner[c]) == int(owner[r]):
+            continue  # device-local: the in-step sequential sweep covers it
+        tr = solve_level.get(r)
+        if tr is None or not (0 <= t < len(step_of) and 0 <= tr < len(step_of)):
+            continue  # missing/ranged solves already flagged — don't cascade
+        if step_of[t] >= step_of[tr]:
+            sink.fail(
+                "hb.upd.dest-step",
+                f"remote tile ({r},{c}) updates in merged superstep "
+                f"{int(step_of[t])} but its destination row {r} solves in "
+                f"superstep {int(step_of[tr])} on device {int(owner[r])} — "
+                "unified comm folds the cross-device delta only at superstep "
+                "boundaries, so the contribution never arrives",
+                level=t, tiles=[(r, c)],
             )
 
 

@@ -237,9 +237,10 @@ def test_refresh_plan_rejects_different_pattern():
 
 
 def test_candidate_grid_dimensions():
+    # sched axis: levelset + dagpart + syncfree;
     # kernel axis: platform default + fused + fused_streamed
-    assert len(candidate_grid(PlanOptions.auto(probe_solves=0), 4)) == 2 * 2 * 3
-    assert len(candidate_grid(PlanOptions.auto(probe_solves=0), 1)) == 2 * 1 * 3
+    assert len(candidate_grid(PlanOptions.auto(probe_solves=0), 4)) == 3 * 2 * 3
+    assert len(candidate_grid(PlanOptions.auto(probe_solves=0), 1)) == 3 * 1 * 3
     only_kernel = PlanOptions(kernel="auto")
     assert len(candidate_grid(only_kernel, 4)) == 3
     fixed = PlanOptions()

@@ -36,7 +36,7 @@ def test_solver_all_modes_on_8_devices():
         from repro import compat
         mesh = compat.make_mesh((8,), ("x",))
         for comm in ["zerocopy", "unified"]:
-            for sched in ["levelset", "syncfree"]:
+            for sched in ["levelset", "dagpart", "syncfree"]:
                 for part in ["taskpool", "contiguous", "malleable"]:
                     cfg = SolverConfig(block_size=16, comm=comm, sched=sched, partition=part)
                     x = sptrsv(a, b, mesh=mesh, config=cfg)
@@ -49,9 +49,10 @@ def test_solver_all_modes_on_8_devices():
 @pytest.mark.slow
 def test_fused_backend_bit_exact_all_modes_on_8_devices():
     """Fused superstep megakernel / frontier-bucketed syncfree vs the
-    lax.switch / dense executors, all four sched x comm modes, on a real
-    8-device mesh. Exact-arithmetic (dyadic) values make the bitwise
-    comparison meaningful — see tests/test_superstep.py."""
+    lax.switch / dense executors, all sched x comm modes (including dagpart
+    merged supersteps), on a real 8-device mesh. Exact-arithmetic (dyadic)
+    values make the bitwise comparison meaningful — see
+    tests/test_superstep.py."""
     print(run_py("""
         import numpy as np, jax
         from repro import compat
@@ -70,8 +71,8 @@ def test_fused_backend_bit_exact_all_modes_on_8_devices():
         x_ref = reference_solve(a, b)
         mesh = compat.make_mesh((8,), ("x",))
         for comm in ("zerocopy", "unified"):
-            for sched in ("levelset", "syncfree"):
-                ref_backend = "pallas" if sched == "levelset" else None
+            for sched in ("levelset", "dagpart", "syncfree"):
+                ref_backend = "pallas" if sched != "syncfree" else None
                 sw = DistributedSolver(build_plan(a, 8, SolverConfig(
                     block_size=16, comm=comm, sched=sched,
                     kernel_backend=ref_backend)), mesh)
@@ -87,11 +88,11 @@ def test_fused_backend_bit_exact_all_modes_on_8_devices():
 
 @pytest.mark.slow
 def test_streamed_store_bit_exact_all_modes_on_8_devices():
-    """Streaming HBM tile store vs the resident fused megakernel, all four
-    sched x comm modes, on a real 8-device mesh — bit-identical on the dyadic
-    exact-arithmetic structure (for sched="syncfree" the streamed backend is
-    defined to behave exactly like "fused"; asserting equality there pins that
-    contract too)."""
+    """Streaming HBM tile store vs the resident fused megakernel, all
+    sched x comm modes (including dagpart merged supersteps), on a real
+    8-device mesh — bit-identical on the dyadic exact-arithmetic structure
+    (for sched="syncfree" the streamed backend is defined to behave exactly
+    like "fused"; asserting equality there pins that contract too)."""
     print(run_py("""
         import numpy as np, jax
         from repro import compat
@@ -111,7 +112,7 @@ def test_streamed_store_bit_exact_all_modes_on_8_devices():
         x_ref = reference_solve(a, b)
         mesh = compat.make_mesh((8,), ("x",))
         for comm in ("zerocopy", "unified"):
-            for sched in ("levelset", "syncfree"):
+            for sched in ("levelset", "dagpart", "syncfree"):
                 fu = DistributedSolver(build_plan(a, 8, SolverConfig(
                     block_size=16, comm=comm, sched=sched,
                     kernel_backend="fused")), mesh)
@@ -119,10 +120,12 @@ def test_streamed_store_bit_exact_all_modes_on_8_devices():
                     block_size=16, comm=comm, sched=sched,
                     kernel_backend="fused_streamed"))
                 st = DistributedSolver(st_plan, mesh)
-                if sched == "levelset":
+                if sched in ("levelset", "dagpart"):
                     ds = dispatch_stats(st_plan)
                     assert fused_streaming(st_plan) and ds["streamed"], (comm, sched)
                     assert ds["stream_dma_bytes"] > 0, (comm, sched)
+                if sched == "dagpart":
+                    assert ds["supersteps"] <= ds["supersteps_levelset"], comm
                 xf, xs = fu.solve(b), st.solve(b)
                 assert np.array_equal(xf, xs), (comm, sched)
                 assert np.array_equal(xs, x_ref.astype(np.float32)), (comm, sched)
@@ -134,7 +137,7 @@ def test_streamed_store_bit_exact_all_modes_on_8_devices():
 def test_numeric_refresh_bit_identical_all_modes_on_8_devices():
     """Factorizing new values through the session context must be
     bit-identical to a fresh build_plan on the same pattern — plans AND
-    executed solves, across all four sched x comm modes, on 8 devices."""
+    executed solves, across all sched x comm modes, on 8 devices."""
     print(run_py("""
         import numpy as np, jax
         from repro import compat
@@ -149,7 +152,7 @@ def test_numeric_refresh_bit_identical_all_modes_on_8_devices():
         b = np.random.default_rng(1).uniform(-1, 1, a.n)
         mesh = compat.make_mesh((8,), ("x",))
         for comm in ("zerocopy", "unified"):
-            for sched in ("levelset", "syncfree"):
+            for sched in ("levelset", "dagpart", "syncfree"):
                 cfg = SolverConfig(block_size=16, comm=comm, sched=sched)
                 ctx = SpTRSVContext(mesh=mesh, options=cfg)
                 h = ctx.analyse(a)

@@ -281,6 +281,56 @@ def test_probe_free_session_inherits_persisted_weights(tmp_path):
         hlo_weights(16, "reference")
 
 
+def record_pair(store, ratio, B=16, n=3):
+    """Paired fused / fused_streamed samples where the streamed executor
+    costs ``ratio``x the resident one per schedule work unit."""
+    for i in range(n):
+        su, tu = 100.0 + 10 * i, 50.0 + 5 * i
+        units = su + tu
+        store.record(backend="fused", B=B, signature=f"f{i}",
+                     solve_units=su, tile_units=tu, tile_flop_units=tu,
+                     R=1, measured_us=2.0 * units)
+        store.record(backend="fused_streamed", B=B, signature=f"s{i}",
+                     solve_units=su, tile_units=tu, tile_flop_units=tu,
+                     R=1, measured_us=2.0 * ratio * units)
+
+
+def test_calibrated_stream_limit_scales_default_by_measured_ratio():
+    from repro.core.solver import DEFAULT_STREAM_VMEM_LIMIT
+
+    store = cal.CalibrationStore()
+    assert cal.calibrated_stream_limit(store) is None  # no samples at all
+    record_pair(store, ratio=2.0)  # streaming costs 2x per work unit
+    assert cal.calibrated_stream_limit(store) == 2 * DEFAULT_STREAM_VMEM_LIMIT
+    # near-free streaming drags the crossover down to the floor clamp,
+    # pathological DMA cost saturates at the ceiling
+    cheap, costly = cal.CalibrationStore(), cal.CalibrationStore()
+    record_pair(cheap, ratio=0.01)
+    record_pair(costly, ratio=1000.0)
+    assert cal.calibrated_stream_limit(cheap) == cal.STREAM_LIMIT_FLOOR
+    assert cal.calibrated_stream_limit(costly) == cal.STREAM_LIMIT_CEIL
+
+
+def test_calibrated_stream_limit_needs_paired_backends():
+    """Fused-only samples measure no crossover: callers must keep the fixed
+    default rather than extrapolate from one executor."""
+    store = cal.CalibrationStore()
+    record_all(store, synthetic_samples(), backend="fused")
+    assert cal.calibrated_stream_limit(store) is None
+
+
+def test_stream_vmem_limit_resolution_order(monkeypatch):
+    """env override > calibrated crossover > fixed default."""
+    from repro.core.solver import DEFAULT_STREAM_VMEM_LIMIT, stream_vmem_limit
+
+    monkeypatch.delenv("REPRO_STREAM_VMEM_LIMIT", raising=False)
+    assert stream_vmem_limit() == DEFAULT_STREAM_VMEM_LIMIT  # pristine store
+    record_pair(cal.get_store(), ratio=2.0)
+    assert stream_vmem_limit() == 2 * DEFAULT_STREAM_VMEM_LIMIT
+    monkeypatch.setenv("REPRO_STREAM_VMEM_LIMIT", "123456")
+    assert stream_vmem_limit() == 123456  # env beats the measurement
+
+
 def test_tune_probes_record_samples_and_compile_us(tmp_path):
     path = str(tmp_path / "weights.json")
     cal.set_store(cal.CalibrationStore(path=path))
@@ -291,10 +341,11 @@ def test_tune_probes_record_samples_and_compile_us(tmp_path):
     assert decision.mode == "probed"
     assert set(decision.compile_us) == set(decision.probe_us)
     assert all(us > 0 for us in decision.compile_us.values())
-    # one sample per probed candidate, persisted for the next session
-    assert cal.get_store().n_samples() == len(decision.probe_us) == 2
+    # one sample per probed candidate (levelset/dagpart/syncfree), persisted
+    # for the next session
+    assert cal.get_store().n_samples() == len(decision.probe_us) == 3
     reloaded = cal.CalibrationStore(path=path)
-    assert reloaded.n_samples() == 2
+    assert reloaded.n_samples() == 3
     # recorded work units are exactly what the scorer multiplies weights by
     combo = decision.chosen
     sig = cal.probe_signature(plan, opts.rhs_hint)

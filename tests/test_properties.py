@@ -54,6 +54,27 @@ def test_executors_bit_identical_on_dyadic_draws(problem):
     np.testing.assert_array_equal(xs["fused_streamed"], reference_solve(a, b))
 
 
+@settings(max_examples=5, **SETTINGS)
+@given(problem=strategies.dyadic_problems())
+def test_dagpart_bit_identical_to_levelset_on_dyadic_draws(problem):
+    """Merging supersteps must never change a bit: the dagpart plan (every
+    kernel backend) reproduces the unmerged levelset switch executor exactly
+    on exact-arithmetic draws, and the merged plan verifies strict."""
+    from repro.verify import verify_plan
+
+    a, b = problem
+    assume(strategies.exactness_holds(a, b))
+    mesh = strategies.mesh1()
+    ref = DistributedSolver(
+        build_plan(a, 1, SolverConfig(block_size=16)), mesh).solve(b)
+    for kb in ("reference", "pallas", "fused", "fused_streamed"):
+        cfg = SolverConfig(block_size=16, sched="dagpart", kernel_backend=kb)
+        plan = build_plan(a, 1, cfg)
+        assert verify_plan(plan, level="strict").passed
+        x = DistributedSolver(plan, mesh).solve(b)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(x))
+
+
 @settings(max_examples=15, **SETTINGS)
 @given(problem=strategies.triangular_problems(max_n=200))
 def test_plan_schedule_invariants(problem):
@@ -92,6 +113,8 @@ def test_partition_invariants(bs, strategy):
 
 @pytest.mark.parametrize("sched,comm", [("levelset", "zerocopy"),
                                         ("levelset", "unified"),
+                                        ("dagpart", "zerocopy"),
+                                        ("dagpart", "unified"),
                                         ("syncfree", "zerocopy"),
                                         ("syncfree", "unified")])
 @pytest.mark.parametrize("transpose", [False, True])

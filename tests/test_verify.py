@@ -15,6 +15,7 @@ segmentation although every update is device-local.
 """
 import dataclasses
 import io
+from unittest import mock
 
 import numpy as np
 import pytest
@@ -50,6 +51,15 @@ def multi_plan():
 def syncfree_plan():
     a = suite.random_levelled(400, 8, 4.0, seed=6)
     return build_plan(a, 2, SolverConfig(block_size=8, sched="syncfree",
+                                         partition="taskpool"))
+
+
+@pytest.fixture(scope="module")
+def dagpart_plan():
+    """Two-device merged-superstep plan with a real cut and a non-trivial
+    ``step_off`` (some levels merge, some stay boundaries)."""
+    a = suite.random_levelled(400, 8, 4.0, seed=6)
+    return build_plan(a, 2, SolverConfig(block_size=8, sched="dagpart",
                                          partition="taskpool"))
 
 
@@ -248,6 +258,86 @@ def test_mutation_poisoned_pad_tile(chain_plan):
 
 
 # -----------------------------------------------------------------------
+# dagpart merged supersteps (ISSUE 8): legal merges verify clean, illegal
+# merges are caught with the exact happens-before / contract rule
+# -----------------------------------------------------------------------
+
+
+def merge_everything(bs, part, **_kw):
+    """An illegal merge pass: collapse the whole level range into ONE
+    superstep, ignoring where every remote source actually solves."""
+    return np.array([0, int(bs.block_level.max()) + 1], dtype=np.int32)
+
+
+def test_dagpart_chain_collapses_supersteps():
+    """The acceptance headline: a pure chain merges >= 2x fewer supersteps
+    than levelset, and the merged plan still verifies strict."""
+    a = suite.chain(160)
+    plan = build_plan(a, 1, SolverConfig(block_size=8, sched="dagpart"))
+    assert verify_plan(plan, level="strict").passed
+    ds = dispatch_stats(plan)
+    assert ds["supersteps_levelset"] == plan.n_levels
+    assert ds["superstep_reduction"] >= 2.0
+    assert ds["supersteps"] < ds["supersteps_levelset"]
+    assert ds["schedule_table_bytes"] > 0
+
+
+def test_dagpart_clean_plan_verifies_strict(dagpart_plan):
+    """The multi-device merged plan with a real cut is itself clean (the
+    uncorrupted baseline for the illegal-merge mutations below)."""
+    plan = clean(dagpart_plan)
+    assert plan.step_off is not None
+    report = verify_plan(plan, level="strict")
+    assert "hb.exchange.position" in report.rules_checked
+    assert "kc.steps.partition" in report.rules_checked
+
+
+def test_mutation_illegal_merge_zerocopy_strands_exchange():
+    """Force-merging past a cross-device dependency hoists the exchange of a
+    row whose remote update now lands in the same superstep —
+    hb.exchange.position must call the contribution stranded."""
+    a = suite.chain(160)
+    cfg = SolverConfig(block_size=8, sched="dagpart", partition="taskpool")
+    with mock.patch("repro.core.solver.merge_levels", merge_everything):
+        plan = build_plan(a, 2, cfg)
+    report = verify_plan(plan, level="strict")
+    assert not report.passed
+    bad = report.by_rule("hb.exchange.position")
+    assert bad and any("stranded" in f.message for f in bad)
+
+
+def test_mutation_illegal_merge_unified_dest_step():
+    """Under unified comm the dense psum folds the cross-device delta only at
+    superstep boundaries: an intra-step remote update passes the micro-level
+    hb.upd.dest-after walk but must fail the superstep-granular
+    hb.upd.dest-step rule."""
+    a = suite.chain(160)
+    cfg = SolverConfig(block_size=8, sched="dagpart", comm="unified",
+                       partition="taskpool")
+    with mock.patch("repro.core.solver.merge_levels", merge_everything):
+        plan = build_plan(a, 2, cfg)
+    report = verify_plan(plan, level="strict")
+    assert not report.passed
+    bad = report.by_rule("hb.upd.dest-step")
+    assert bad and any("never arrives" in f.message for f in bad)
+    # micro-level ordering is intact — only the step granularity is broken
+    assert not report.by_rule("hb.upd.dest-after")
+
+
+def test_mutation_corrupt_step_table(dagpart_plan):
+    """A step table that no longer partitions [0, T] is flagged by the
+    kernel-contract lint (kc.steps.partition), not crashed on."""
+    plan = clean(dagpart_plan)
+    T = plan.n_levels
+    for corrupt in (np.array([0, 0, T], np.int32),     # not strictly increasing
+                    np.array([1, T], np.int32),        # does not start at 0
+                    np.array([0, T + 1], np.int32)):   # overshoots T
+        report = verify_plan(mutate(plan, step_off=corrupt),
+                             level="contracts")
+        assert report.by_rule("kc.steps.partition"), corrupt
+
+
+# -----------------------------------------------------------------------
 # empty-cut regression (the violation the verifier surfaced, now fixed)
 # -----------------------------------------------------------------------
 
@@ -266,7 +356,7 @@ def test_unified_empty_cut_schedules_no_communication():
     assert verify_plan(plan, level="strict").passed
 
 
-@pytest.mark.parametrize("sched", ["levelset", "syncfree"])
+@pytest.mark.parametrize("sched", ["levelset", "dagpart", "syncfree"])
 @pytest.mark.parametrize("comm", ["zerocopy", "unified"])
 def test_empty_cut_plans_verify_strict(sched, comm):
     """Every sched x comm combination over an empty cut is degeneracy-free."""
@@ -291,7 +381,7 @@ def test_unified_empty_cut_solve_matches_reference():
 # -----------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("sched", ["levelset", "syncfree"])
+@pytest.mark.parametrize("sched", ["levelset", "dagpart", "syncfree"])
 @pytest.mark.parametrize("comm", ["zerocopy", "unified"])
 @pytest.mark.parametrize("transpose", [False, True])
 def test_builder_plans_verify_strict(sched, comm, transpose):
