@@ -1,0 +1,124 @@
+"""Service-axis benchmark: solves/sec at a request mix (ISSUE 9).
+
+A serving front end changes the unit of measurement: not the latency of one
+solve but the throughput of a *request mix* — many tenants, a hot pattern
+plus a cold tail, every request its own RHS. For each mix this bench stands
+up a warm :class:`repro.service.SolveEngine` over a populated plan store and
+times two serving disciplines over the identical request sequence:
+
+* **batched** — the admission queue coalesces same-pattern RHS into multi-RHS
+  panels (``max_batch`` wide), one compiled dispatch per panel;
+* **one-by-one** — ``max_batch=1``, the no-coalescing baseline every request
+  pays its own dispatch for.
+
+Emitted rows (CSV convention ``name,us_per_call,derived``):
+
+* ``service/<mix>`` — batched per-request time. The derived column is
+  self-contained for the compare gate: ``req_per_s``, ``coalesce_width``,
+  ``hit_rate`` (plan-store), ``coalesce_win`` (one-by-one us / batched us —
+  the quantity ``compare.py --min-coalesce-win`` gates on the hot mix),
+  ``analysis_cold_us`` vs ``analysis_warm_us`` (fresh symbolic analysis vs
+  store-hydrated analyse of the hot pattern — what persistence buys a
+  cold-started worker).
+* ``service/<mix>/onebyone`` — the baseline per-request time.
+
+Both disciplines run one warmup pass (compile) before the timed pass, so the
+comparison is steady-state serving throughput, not trace caching.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.api import PlanOptions, SpTRSVContext
+from repro.service import PlanStore, SolveEngine
+from repro.sparse import suite
+
+BLOCK = 32
+MAX_BATCH = 8
+
+# mix -> (pattern builders, request pattern-index sequence)
+MIXES = {
+    # every request on one hot pattern: pure coalescing
+    "hot": ((lambda: suite.random_levelled(600, 24, 4.0, seed=0),),
+            [0] * 32),
+    # 3-pattern hot/cold mix, ~70% of traffic on pattern 0
+    "mixed": ((lambda: suite.random_levelled(600, 24, 4.0, seed=0),
+               lambda: suite.random_levelled(300, 12, 4.0, seed=1),
+               lambda: suite.grid2d_factor(14, seed=2)),
+              [0, 0, 1, 0, 0, 2, 0, 0, 1, 0, 0, 0,
+               0, 2, 0, 0, 1, 0, 0, 0, 0, 0, 2, 0]),
+}
+
+
+def serve_pass(engine: SolveEngine, mats, mix, rhs) -> tuple[float, dict]:
+    """Submit + drain the whole mix; returns (wall_s, stats delta)."""
+    before = dict(engine._counters)
+    t0 = time.perf_counter()
+    tickets = [engine.submit(f"tenant{i % 4}", mats[p], rhs[i])
+               for i, p in enumerate(mix)]
+    engine.drain()
+    wall = time.perf_counter() - t0
+    assert all(t.done() for t in tickets)
+    after = engine.stats()
+    delta = {k: after.get(k, 0) - before.get(k, 0)
+             for k in ("results", "batches", "coalesced_columns")}
+    return wall, delta
+
+
+def analysis_us(a, opts, store=None) -> float:
+    """Wall time of one full analyse (+ forward plan) on a fresh session."""
+    ctx = SpTRSVContext(options=opts, plan_store=store)
+    t0 = time.perf_counter()
+    ctx.plan(ctx.analyse(a))
+    return (time.perf_counter() - t0) * 1e6
+
+
+def main() -> None:
+    opts = PlanOptions(block_size=BLOCK)
+    rng = np.random.default_rng(0)
+    for mix_name, (builders, mix) in MIXES.items():
+        mats = [build() for build in builders]
+        rhs = [rng.uniform(-1, 1, mats[p].n).astype(np.float32) for p in mix]
+        store_root = f"/tmp/repro-bench-plans-{mix_name}"
+        PlanStore(store_root)  # ensure the directory exists
+
+        # populate the store + measure the analysis amortization directly
+        cold_us = analysis_us(mats[0], opts)
+        pop = SpTRSVContext(options=opts, plan_store=PlanStore(store_root))
+        for m in mats:
+            pop.plan(pop.analyse(m))
+        warm_us = analysis_us(mats[0], opts, store=PlanStore(store_root))
+
+        results = {}
+        for label, width in (("batched", MAX_BATCH), ("onebyone", 1)):
+            store = PlanStore(store_root)
+            engine = SolveEngine(options=opts, plan_store=store,
+                                 max_batch=width)
+            serve_pass(engine, mats, mix, rhs)  # warmup: compile + load plans
+            wall, delta = serve_pass(engine, mats, mix, rhs)
+            assert delta["results"] == len(mix)
+            results[label] = (wall, delta, store.stats)
+
+        wall_b, delta_b, ps = results["batched"]
+        wall_1, _, _ = results["onebyone"]
+        us_b = wall_b * 1e6 / len(mix)
+        us_1 = wall_1 * 1e6 / len(mix)
+        width = delta_b["coalesced_columns"] / max(delta_b["batches"], 1)
+        derived = (f"req_per_s={len(mix) / wall_b:.0f};"
+                   f"solves_per_s={delta_b['batches'] / wall_b:.0f};"
+                   f"coalesce_width={width:.2f};"
+                   f"hit_rate={ps['hit_rate']:.2f};"
+                   f"coalesce_win={us_1 / us_b:.3f};"
+                   f"analysis_cold_us={cold_us:.0f};"
+                   f"analysis_warm_us={warm_us:.0f};"
+                   f"requests={len(mix)};batches={delta_b['batches']}")
+        emit(f"service/{mix_name}", us_b, derived)
+        emit(f"service/{mix_name}/onebyone", us_1,
+             f"req_per_s={len(mix) / wall_1:.0f}")
+
+
+if __name__ == "__main__":
+    main()

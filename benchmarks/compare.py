@@ -30,6 +30,13 @@ row's self-contained derived column) of at least
 ``--min-superstep-reduction`` (default 2x). These are exact plan statics —
 no noise floor, no window median: a merge-heuristic regression that stops
 collapsing the chain fails the *new* run outright.
+
+A third dedicated gate watches the serving layer: every hot-mix
+``service/<mix>`` row must report a ``coalesce_win`` (one-by-one per-request
+time / batched per-request time, self-contained in the derived column) of at
+least ``--min-coalesce-win`` (default 1.0) — batched multi-RHS serving that
+stops beating one-by-one dispatch is a queue/panel regression, gated on the
+new run alone.
 """
 from __future__ import annotations
 
@@ -42,6 +49,10 @@ MIN_US = 50.0  # ignore rows faster than this: pure scheduler noise on CI
 # matrices whose level structure is dominated by long narrow chains — the
 # regime the dagpart merge pass exists for; its reduction is gated on these
 CHAIN_HEAVY = ("chain",)
+
+# request mixes where coalescing has same-pattern traffic to batch — the
+# regime the serving queue exists for; its throughput win is gated on these
+HOT_MIXES = ("hot", "mixed")
 
 
 def load_rows(path: str) -> dict:
@@ -117,6 +128,34 @@ def gate_superstep_reduction(path: str, min_reduction: float) -> list:
     run whose merged plan keeps too many supersteps."""
     return [(m, r) for m, r in sorted(superstep_reductions(path).items())
             if m in CHAIN_HEAVY and r < min_reduction]
+
+
+def coalesce_wins(path: str) -> dict:
+    """``mix -> coalesce_win`` for every ``service/<mix>`` row whose derived
+    column carries the batched-vs-one-by-one ratio (each row is
+    self-contained: no join against the ``/onebyone`` sibling)."""
+    with open(path) as f:
+        rows = json.load(f)
+    out = {}
+    for name, row in rows.items():
+        if name.startswith("_") or not isinstance(row, dict):
+            continue
+        parts = name.split("/")
+        if len(parts) != 2 or parts[0] != "service":
+            continue
+        d = parse_derived(row.get("derived", ""))
+        try:
+            out[parts[1]] = float(d["coalesce_win"])
+        except (KeyError, ValueError):
+            continue
+    return out
+
+
+def gate_coalesce_win(path: str, min_win: float) -> list:
+    """``(mix, win)`` failures: hot-mix service rows in the new run where
+    batched serving no longer beats one-by-one by the required factor."""
+    return [(m, w) for m, w in sorted(coalesce_wins(path).items())
+            if m in HOT_MIXES and w < min_win]
 
 
 def _median(vals: list) -> float:
@@ -202,6 +241,10 @@ def main(argv=None) -> int:
                     help="fail when a chain-heavy sched/<m>/dagpart row in "
                          "the new run reduces supersteps by less than this "
                          "factor vs levelset")
+    ap.add_argument("--min-coalesce-win", type=float, default=1.0,
+                    help="fail when a hot-mix service/<mix> row in the new "
+                         "run reports batched throughput less than this "
+                         "factor over one-by-one serving")
     args = ap.parse_args(argv)
     if len(args.files) < 2:
         ap.error("need at least one previous and one new JSON")
@@ -212,6 +255,7 @@ def main(argv=None) -> int:
     fused_regr = compare_fused(window, new, args.max_fused_regression)
     sched_regr = gate_superstep_reduction(args.files[-1],
                                           args.min_superstep_reduction)
+    serve_regr = gate_coalesce_win(args.files[-1], args.min_coalesce_win)
 
     seen_prev = set().union(*window)
     only_prev = sorted(seen_prev - set(new))
@@ -237,14 +281,18 @@ def main(argv=None) -> int:
         print(f"[compare] SUPERSTEP REDUCTION FAILED sched/{matrix}/dagpart: "
               f"{reduction:.2f}x < required "
               f"{args.min_superstep_reduction:.2f}x")
-    if regressions or fused_regr or sched_regr:
+    for mix, win in serve_regr:
+        print(f"[compare] COALESCE WIN FAILED service/{mix}: batched is "
+              f"{win:.2f}x one-by-one < required "
+              f"{args.min_coalesce_win:.2f}x")
+    if regressions or fused_regr or sched_regr or serve_regr:
         note = provenance_note(args.files[0], args.files[-1])
         if note:
             print(f"[compare] provenance drift (informational): {note}")
         print(f"[compare] FAIL: {len(regressions)} row(s) regressed "
               f">{args.max_regression:.0%}, {len(fused_regr)} fused-ratio "
               f"regression(s), {len(sched_regr)} superstep-reduction "
-              f"failure(s)")
+              f"failure(s), {len(serve_regr)} coalesce-win failure(s)")
         return 1
     print("[compare] OK")
     return 0

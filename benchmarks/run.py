@@ -22,6 +22,7 @@ run against it (>25% per-row regressions fail).
 
   krylov  IC(0)-PCG iteration cost, suite x comm/partition x RHS batch
   auto    session-API auto picks vs fixed backends + context cache hit rate
+  service solves/sec at a multi-tenant request mix (batched vs one-by-one)
 """
 from __future__ import annotations
 
@@ -119,6 +120,9 @@ def main() -> None:
         print(run_with_devices("benchmarks.bench_scenarios", 4, env), end="")
         auto_env = dict(env, REPRO_BENCH_FAST="1" if fast else "0")
         print(run_with_devices("benchmarks.bench_auto", 4, auto_env), end="")
+        # serving axis: solves/sec at a request mix (single device; the
+        # coalesce-win gate in compare.py keys on these rows in every mode)
+        print(run_with_devices("benchmarks.bench_service", 1, env), end="")
         if not fast:
             print(run_with_devices("benchmarks.bench_krylov", 4, env), end="")
             print(run_with_devices("benchmarks.bench_tasks", 4, env), end="")

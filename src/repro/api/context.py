@@ -94,6 +94,7 @@ class SpTRSVHandle:
     solvers: dict = dataclasses.field(default_factory=dict)  # transpose -> solver
     shapes: set = dataclasses.field(default_factory=set)  # (transpose, R) compiled
     n_factorize: int = 0
+    plan_store_hit: bool = False  # analysis came from the persistent store
 
     @property
     def part(self) -> Partition:
@@ -112,21 +113,59 @@ class SpTRSVContext:
     ``analyses`` counts real partition/schedule constructions (shared-pattern
     handles do NOT re-count), ``solves`` the executor invocations, and the
     cache hit rate covers re-analyse calls and executor/shape reuse.
+
+    ``plan_store`` (a :class:`repro.service.planstore.PlanStore`, duck-typed)
+    makes ``analyse`` consult the persistent store before running a symbolic
+    analysis — a warm worker serves without a single partition/schedule
+    construction (``plan_store_hits``, not ``analyses``) — and persists every
+    freshly built plan. ``cache_capacity`` bounds the handle/executor cache
+    LRU-style: the least-recently-used entry (its compiled executors with it)
+    is dropped past the capacity, counted under ``session.evictions``.
     """
 
     def __init__(self, mesh: jax.sharding.Mesh | None = None,
                  options: PlanOptions | SolverConfig | None = None,
-                 registry: MetricsRegistry | None = None):
+                 registry: MetricsRegistry | None = None,
+                 plan_store=None, cache_capacity: int | None = None):
         self.mesh = mesh if mesh is not None else compat.make_mesh((1,), (AXIS,))
         self.options = as_options(options)
         self.registry = registry if registry is not None else get_registry()
-        self._entries: dict[tuple, SpTRSVHandle] = {}
+        self.plan_store = plan_store
+        if cache_capacity is not None and cache_capacity < 1:
+            raise ValueError("cache_capacity must be >= 1 (or None: unbounded)")
+        self.cache_capacity = cache_capacity
+        self._entries: collections.OrderedDict[tuple, SpTRSVHandle] = \
+            collections.OrderedDict()
         self._symbolic: dict[tuple, _Symbolic] = {}
         self._counters: collections.Counter = collections.Counter()
 
     @property
     def n_devices(self) -> int:
         return int(self.mesh.devices.size)
+
+    # -- cache bookkeeping ------------------------------------------------
+
+    def _evict(self) -> None:
+        # LRU bound on compiled state: handles (and their executors) drop
+        # oldest-first; the cheap symbolic cache is deliberately retained so
+        # a re-analysed pattern only recompiles, never re-partitions
+        while (self.cache_capacity is not None
+               and len(self._entries) > self.cache_capacity):
+            self._entries.popitem(last=False)
+            self._counters["evictions"] += 1
+            self.registry.counter("session.evictions").inc()
+
+    def _store_save(self, handle: SpTRSVHandle, plan: Plan) -> None:
+        """Persist a freshly built plan; a read-only or full store degrades
+        to no persistence, never to a failed solve."""
+        if self.plan_store is None:
+            return
+        try:
+            self.plan_store.save(plan, pattern=handle.pattern,
+                                 options=handle.options)
+        except Exception:
+            self._counters["plan_store_save_errors"] += 1
+            self.registry.counter("session.plan_store_save_errors").inc()
 
     # -- analyse ----------------------------------------------------------
 
@@ -183,6 +222,7 @@ class SpTRSVContext:
         if hit is not None:
             self._counters["analysis_hits"] += 1
             self.registry.counter("session.analysis_hits").inc()
+            self._entries.move_to_end(key)
             if hit.matrix is not a and not np.array_equal(hit.matrix.val, a.val):
                 # same pattern, new numeric values: the analysis is a cache
                 # hit but the values must not go stale — refresh in place
@@ -190,8 +230,26 @@ class SpTRSVContext:
             return hit
         with get_tracer().span("sptrsv.analyse", pattern=pat, tag=tag,
                                n=int(a.n), n_devices=self.n_devices) as span:
-            sym = self._analyse_symbolic(a, pat, opts)
-            if opts.is_auto:
+            plan = None
+            if (self.plan_store is not None
+                    and self._symbolic_key(pat, opts) not in self._symbolic):
+                plan = self.plan_store.load(a, self.n_devices, opts)
+            stored = plan is not None
+            if stored:
+                # persistent-store hit: the whole symbolic analysis — and the
+                # resolved config, auto dimensions included — arrives
+                # pre-built, value-hydrated against ``a``, and verified;
+                # no partition/schedule construction runs at all
+                sym = _Symbolic(bs=plan.bs, part=plan.part)
+                config, decision, solver = plan.config, None, None
+                if opts.is_auto:
+                    sym.tuned[opts] = (config, None)
+                self._symbolic[self._symbolic_key(pat, opts)] = sym
+                self._counters["plan_store_hits"] += 1
+                self.registry.counter("session.plan_store_hits").inc()
+                span.set(plan_store_hit=True, sched=config.sched)
+            elif opts.is_auto:
+                sym = self._analyse_symbolic(a, pat, opts)
                 tuned = sym.tuned.get(opts)
                 if tuned is not None:
                     # another handle on this analysis already paid the tuner
@@ -206,14 +264,19 @@ class SpTRSVContext:
                 span.set(sched=config.sched, comm=config.comm,
                          kernel=config.kernel_backend or "default")
             else:
+                sym = self._analyse_symbolic(a, pat, opts)
                 config = opts.to_config()
                 plan, decision, solver = None, None, None
         handle = SpTRSVHandle(pattern=pat, tag=tag, options=opts, config=config,
-                              matrix=a, symbolic=sym, plan=plan, auto=decision)
+                              matrix=a, symbolic=sym, plan=plan, auto=decision,
+                              plan_store_hit=stored)
         if solver is not None:  # probing already compiled the winner
             handle.solvers[False] = solver
             handle.shapes.add((False, opts.rhs_hint))
+        if not stored and plan is not None:
+            self._store_save(handle, plan)  # tuner already built the winner
         self._entries[key] = handle
+        self._evict()
         return handle
 
     # -- factorize --------------------------------------------------------
@@ -283,6 +346,9 @@ class SpTRSVContext:
         """
         if isinstance(handle, CSR):
             handle = self.analyse(handle)
+        key = (handle.pattern, handle.options, handle.tag)
+        if key in self._entries:  # LRU: a served handle is recently used
+            self._entries.move_to_end(key)
         solver = self.executor(handle, transpose=transpose)
         b = np.asarray(b)
         R = b.shape[1] if b.ndim == 2 else 1
@@ -326,15 +392,25 @@ class SpTRSVContext:
         once, lazily)."""
         if transpose:
             if handle.tplan is None:
-                handle.tplan = build_plan(handle.matrix, self.n_devices,
-                                          handle.config, transpose=True,
-                                          verify=handle.options.verify)
-                self._counters["transpose_extensions"] += 1
+                if self.plan_store is not None:
+                    handle.tplan = self.plan_store.load(
+                        handle.matrix, self.n_devices, handle.options,
+                        transpose=True)
+                if handle.tplan is not None:
+                    self._counters["plan_store_hits"] += 1
+                    self.registry.counter("session.plan_store_hits").inc()
+                else:
+                    handle.tplan = build_plan(handle.matrix, self.n_devices,
+                                              handle.config, transpose=True,
+                                              verify=handle.options.verify)
+                    self._counters["transpose_extensions"] += 1
+                    self._store_save(handle, handle.tplan)
             return handle.tplan
         if handle.plan is None:
             handle.plan = build_plan(handle.matrix, self.n_devices,
                                      handle.config, part=handle.part,
                                      verify=handle.options.verify)
+            self._store_save(handle, handle.plan)
         return handle.plan
 
     # -- introspection ----------------------------------------------------
@@ -343,6 +419,7 @@ class SpTRSVContext:
         """Core dispatch counts for the handle's forward plan, plus the
         recorded auto-tuning decision when auto mode ran."""
         stats = dict(dispatch_stats(self.plan(handle)))
+        stats["plan_store_hit"] = handle.plan_store_hit
         if handle.auto is not None:
             d = handle.auto
             stats["auto"] = {
@@ -358,7 +435,7 @@ class SpTRSVContext:
         (symbolic-analysis reuse across handles counts as hits too)."""
         c = dict(self._counters)
         hits = (c.get("analysis_hits", 0) + c.get("solve_cache_hits", 0)
-                + c.get("symbolic_hits", 0))
+                + c.get("symbolic_hits", 0) + c.get("plan_store_hits", 0))
         misses = c.get("analyses", 0) + c.get("solve_cache_misses", 0)
         c["cache_hit_rate"] = hits / (hits + misses) if hits + misses else 0.0
         return c

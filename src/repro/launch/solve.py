@@ -75,6 +75,10 @@ def main() -> None:
                     metavar="PATH.jsonl",
                     help="write lifecycle spans + a final metrics snapshot "
                          "to this JSONL file (default: env REPRO_TRACE)")
+    ap.add_argument("--plan-store", default=None, metavar="DIR",
+                    help="persistent plan store directory: reuse a previously "
+                         "saved symbolic analysis for this pattern x options "
+                         "(strict-verified on load) and save it when missing")
     args = ap.parse_args()
     if args.trace:
         obs_trace.configure_tracing(args.trace)
@@ -97,7 +101,12 @@ def main() -> None:
         merge_width=args.merge_width, merge_cost=args.merge_cost,
         calibrate_cost=args.calibrate_cost, probe_solves=args.probe,
     )
-    ctx = SpTRSVContext(mesh=mesh, options=opts)
+    store = None
+    if args.plan_store:
+        from repro.service import PlanStore
+
+        store = PlanStore(args.plan_store)
+    ctx = SpTRSVContext(mesh=mesh, options=opts, plan_store=store)
     handle = ctx.analyse(a)
     plan = ctx.plan(handle)
     if args.verify:
@@ -115,6 +124,12 @@ def main() -> None:
           f"level-imbalance={cs.level_imbalance:.2f} "
           f"(cost {cs.level_cost_imbalance:.2f}) buckets={len(plan.buckets)}")
     ds = ctx.dispatch_stats(handle)
+    if store is not None:
+        ps = store.stats
+        print(f"[solve] plan-store: hit={ds['plan_store_hit']} "
+              f"(hits={ps.get('hits', 0)} misses={ps.get('misses', 0)} "
+              f"rejected={ps.get('rejected', 0)} saves={ps.get('saves', 0)}) "
+              f"root={store.root}")
     cfg = handle.config
     backend = ops.executor_backend(cfg.kernel_backend)
     if handle.auto is not None:

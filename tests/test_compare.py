@@ -4,9 +4,11 @@ import json
 import pytest
 
 from benchmarks.compare import (
+    coalesce_wins,
     compare,
     compare_fused,
     fused_ratios,
+    gate_coalesce_win,
     load_provenance,
     load_rows,
     main,
@@ -109,6 +111,47 @@ def test_provenance_note_surfaces_drift(tmp_path):
     bare = tmp_path / "bare.json"
     bare.write_text(json.dumps({"a": {"us_per_call": 100.0}}))
     assert provenance_note(str(bare), drift) == ""
+
+
+def dump_service(tmp_path, name, win, extra=None):
+    p = tmp_path / name
+    data = {"service/hot": {"us_per_call": 300.0,
+                            "derived": f"req_per_s=2000;coalesce_width=8.0;"
+                                       f"hit_rate=1.00;coalesce_win={win}"},
+            "service/hot/onebyone": {"us_per_call": 300.0 * win,
+                                     "derived": "req_per_s=500"}}
+    data.update(extra or {})
+    p.write_text(json.dumps(data))
+    return str(p)
+
+
+def test_coalesce_win_extraction_and_gate(tmp_path):
+    good = dump_service(tmp_path, "good.json", 4.5, extra={
+        # non-service and malformed rows never participate
+        "kernel/m/fused": {"us_per_call": 100.0, "derived": ""},
+        "service/odd": {"us_per_call": 10.0, "derived": "req_per_s=1"},
+    })
+    assert coalesce_wins(good) == {"hot": 4.5}
+    assert gate_coalesce_win(good, 1.0) == []
+    bad = dump_service(tmp_path, "bad.json", 0.8)
+    assert gate_coalesce_win(bad, 1.0) == [("hot", 0.8)]
+    # an unknown mix name is reported by extraction but never gated
+    exotic = dump_service(tmp_path, "exotic.json", 4.0)
+    data = json.loads(open(exotic).read())
+    data["service/adversarial"] = {"us_per_call": 10.0,
+                                   "derived": "coalesce_win=0.1"}
+    open(exotic, "w").write(json.dumps(data))
+    assert gate_coalesce_win(exotic, 1.0) == []
+
+
+def test_cli_coalesce_win_exit_code(tmp_path):
+    prev = dump_service(tmp_path, "prev.json", 4.0)
+    good = dump_service(tmp_path, "new_good.json", 3.5)
+    assert main([prev, good]) == 0
+    bad = dump_service(tmp_path, "new_bad.json", 0.9)
+    assert main([prev, bad]) == 1
+    # the threshold is a knob: demanding more than the run delivers fails
+    assert main([prev, good, "--min-coalesce-win", "10.0"]) == 1
 
 
 def test_cli_window_and_exit_codes(tmp_path):

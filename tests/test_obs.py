@@ -354,6 +354,99 @@ def test_tune_probes_record_samples_and_compile_us(tmp_path):
     assert (sample["su"], sample["tu"], sample["tf"]) == (su, tu, tf)
 
 
+# ---------------------------------------------------------------------------
+# service telemetry (ISSUE 9): registry mirrors engine counters exactly
+# ---------------------------------------------------------------------------
+
+
+def serve_mix(registry=None, tracing=False, tmp_path=None):
+    """One deterministic hot/cold mix through an engine; returns (engine,
+    ordered results)."""
+    from repro.service import SolveEngine
+
+    mats = [st.dyadic(suite.random_levelled(n, 5, 3.0, seed=s))
+            for n, s in ((96, 1), (64, 2))]
+    kw = dict(mesh=st.mesh1(), options=PlanOptions(block_size=16),
+              max_batch=4)
+    if registry is not None:
+        kw["registry"] = registry
+    if tmp_path is not None:
+        kw["plan_store"] = str(tmp_path / "plans")
+    eng = SolveEngine(**kw)
+    tickets = []
+    for i in range(8):
+        m = mats[0] if i % 3 else mats[1]
+        tickets.append(eng.submit(f"t{i % 2}", m,
+                                  st.dyadic_rhs(m.n, seed=i)))
+    eng.drain()
+    return eng, [np.asarray(t.result(0)) for t in tickets]
+
+
+def test_service_metrics_reconcile_with_engine_counters(tmp_path):
+    reg = met.MetricsRegistry()
+    eng, _ = serve_mix(registry=reg, tmp_path=tmp_path)
+    snap = reg.snapshot()
+    stats = eng.stats()
+    # every engine counter is mirrored under service.* with the same value
+    # (same discipline as record_plan_metrics vs dispatch_stats)
+    counters = {k: v for k, v in stats.items()
+                if k not in ("queue_depth", "plan_store", "session")}
+    assert counters, "engine produced no counters"
+    for k, v in counters.items():
+        assert snap[f"service.{k}"] == v, k
+    assert snap["service.queue_depth"] == stats["queue_depth"] == 0
+    # distribution instruments agree with the counted totals
+    assert snap["service.coalesce_width"]["count"] == stats["batches"]
+    assert snap["service.coalesce_width"]["sum"] == stats["coalesced_columns"]
+    assert snap["service.request_us"]["count"] == stats["results"]
+    assert snap["service.batch_us"]["count"] == stats["batches"]
+    # the plan store mirrors its own counters and the derived hit-rate gauge
+    ps = stats["plan_store"]
+    for k, v in ps.items():
+        if k != "hit_rate":
+            assert snap[f"planstore.{k}"] == v, k
+    assert snap["service.plan_store_hit_rate"] == pytest.approx(ps["hit_rate"])
+    # and the session counters underneath are the ordinary session.* mirror
+    for k, v in stats["session"].items():
+        if k != "cache_hit_rate":
+            assert snap[f"session.{k}"] == v, k
+
+
+def test_served_results_bit_identical_tracing_on_vs_off():
+    a_probe, _ = small_problem()
+    assert st.exactness_holds(a_probe, st.dyadic_rhs(a_probe.n))
+    tr.configure_tracing(enabled=False)
+    _, off = serve_mix(registry=met.MetricsRegistry())
+    with tr.trace_to() as tracer:
+        _, on = serve_mix(registry=met.MetricsRegistry())
+        names = {r["name"] for r in tracer.export() if r["type"] == "span"}
+    # the serving lifecycle is spanned...
+    assert {"service.batch", "service.request", "sptrsv.analyse",
+            "sptrsv.solve"} <= names
+    # ...and never enters compiled code: served panels are bit-identical
+    assert len(off) == len(on)
+    for x_off, x_on in zip(off, on):
+        np.testing.assert_array_equal(x_off, x_on)
+
+
+def test_service_batch_spans_parent_request_spans(tmp_path):
+    path = str(tmp_path / "serve.jsonl")
+    with tr.trace_to(path):
+        serve_mix(registry=met.MetricsRegistry())
+    recs = [json.loads(line) for line in open(path)]
+    spans = [r for r in recs if r["type"] == "span"]
+    batches = [r for r in spans if r["name"] == "service.batch"]
+    requests = [r for r in spans if r["name"] == "service.request"]
+    assert batches and requests
+    # every batch span carries the admission attrs; width <= padded width
+    for b in batches:
+        assert b["attrs"]["n_requests"] >= 1
+        assert b["attrs"]["width"] <= b["attrs"]["padded_width"]
+    assert sum(b["attrs"]["n_requests"] for b in batches) == len(requests)
+    for r in requests:
+        assert r["attrs"]["latency_us"] > 0
+
+
 def test_dispatch_stats_surfaces_compile_us():
     a, b = small_problem(n=80, levels=5)
     opts = PlanOptions(sched="auto", comm="zerocopy", kernel="reference",

@@ -1,0 +1,276 @@
+"""Serving layer: admission queue, coalescing engine, bounded session caches.
+
+Queue semantics (grouping by pattern x value fingerprint, the RHS pad
+ladder, per-tenant fairness, bounded-queue backpressure), the engine's
+end-to-end batched correctness against the scipy oracle (coalesced panels
+scatter back bit-exactly per request, including the hot-pattern value
+refresh), the threaded serve loop, error routing to tickets, and the ISSUE-9
+LRU satellite: ``cache_capacity`` evicts least-recently-used compiled
+handles with a ``session.evictions`` counter.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+import strategies as st
+from repro.api import PlanOptions, SpTRSVContext
+from repro.obs import metrics as met
+from repro.service import QueueFull, SolveEngine, SolveQueue
+from repro.service.queue import pad_width, rhs_ladder, value_key
+from repro.sparse import suite
+from repro.sparse.matrix import reference_solve
+
+
+def exact(n=96, levels=5, seed=1):
+    return st.dyadic(suite.random_levelled(n, levels, 3.0, seed=seed))
+
+
+def make_engine(**kw):
+    kw.setdefault("mesh", st.mesh1())
+    kw.setdefault("options", PlanOptions(block_size=16))
+    kw.setdefault("registry", met.MetricsRegistry())
+    return SolveEngine(**kw)
+
+
+# ---------------------------------------------------------------------------
+# queue: ladder, grouping, fairness, backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_rhs_ladder_and_pad_width():
+    assert rhs_ladder(8) == (1, 2, 4, 8)
+    assert rhs_ladder(6) == (1, 2, 4, 6)
+    assert rhs_ladder(1) == (1,)
+    lad = rhs_ladder(8)
+    assert [pad_width(lad, r) for r in (1, 2, 3, 5, 8)] == [1, 2, 4, 8, 8]
+
+
+def test_groups_split_by_pattern_values_and_direction():
+    a = exact(seed=1)
+    a_vals = st.dyadic(a, seed=9)  # same pattern, different values
+    c = exact(n=64, seed=2)  # different pattern
+    q = SolveQueue(max_batch=8)
+    b = np.ones(a.n, np.float32)
+    reqs = [q.submit("t", a, b), q.submit("t", a_vals, b),
+            q.submit("t", c, np.ones(c.n, np.float32)),
+            q.submit("t", a, b, transpose=True), q.submit("t", a, b)]
+    groups = {t.request.group for t in reqs}
+    assert len(groups) == 4  # (a), (a new vals), (c), (a transposed)
+    assert reqs[0].request.group == reqs[4].request.group
+    assert value_key(a) != value_key(a_vals)
+    # one batch holds exactly one group: the two same-value `a` requests
+    batch = q.next_batch(force=True)
+    assert sorted(t.request.id for t in batch) == [0, 4]
+
+
+def test_fairness_round_robin_across_tenants():
+    a = exact()
+    q = SolveQueue(max_batch=4)
+    b = np.ones(a.n, np.float32)
+    for i in range(6):
+        q.submit("hog", a, b)  # ids 0..5
+    q.submit("quiet", a, b)  # id 6
+    batch = q.next_batch(force=True)
+    ids = [t.request.id for t in batch]
+    # the quiet tenant's single request is admitted ahead of the hog's tail
+    assert 6 in ids and len(ids) == 4
+    rest = q.next_batch(force=True)
+    assert len(rest) == 3 and q.depth == 0
+
+
+def test_admission_window_and_force():
+    a = exact()
+    q = SolveQueue(max_batch=4, max_wait_s=60.0)
+    b = np.ones(a.n, np.float32)
+    q.submit("t", a, b)
+    assert q.next_batch() is None  # 1 < max_batch and nobody waited 60s
+    for _ in range(3):
+        q.submit("t", a, b)
+    assert len(q.next_batch()) == 4  # full batch dispatches immediately
+    q.submit("t", a, b)
+    assert q.next_batch() is None
+    assert len(q.next_batch(force=True)) == 1  # drain path ignores the window
+
+
+def test_backpressure_queue_full():
+    a = exact()
+    q = SolveQueue(max_batch=2, max_pending=3)
+    b = np.ones(a.n, np.float32)
+    q.submit("t", a, b)
+    q.submit("t", a, np.ones((a.n, 2), np.float32))  # panel: 2 columns
+    with pytest.raises(QueueFull):
+        q.submit("t", a, b)
+    q.next_batch(force=True)
+    q.submit("t", a, b)  # drained capacity is reusable
+
+
+def test_oversized_panel_admitted_alone():
+    a = exact()
+    q = SolveQueue(max_batch=2)
+    q.submit("t", a, np.ones((a.n, 5), np.float32))
+    batch = q.next_batch(force=True)
+    assert len(batch) == 1 and batch[0].request.n_columns == 5
+    assert q.depth == 0
+
+
+def test_coalesce_scatter_roundtrip_mixed_shapes():
+    a = exact()
+    q = SolveQueue(max_batch=8)
+    t1 = q.submit("t", a, np.full(a.n, 1, np.float32))
+    t2 = q.submit("t", a, np.arange(2 * a.n, dtype=np.float32).reshape(a.n, 2))
+    t3 = q.submit("t", a, np.full(a.n, 3, np.float32))
+    batch = q.next_batch(force=True)
+    panel, r = q.coalesce(batch)
+    assert r == 4 and panel.shape == (a.n, 4)  # ladder pad 4 -> 4 (exact)
+    q.scatter(batch, panel)  # identity "solve": inputs come back verbatim
+    np.testing.assert_array_equal(t1.result(0), np.full(a.n, 1, np.float32))
+    assert t2.result(0).shape == (a.n, 2)
+    np.testing.assert_array_equal(t3.result(0), np.full(a.n, 3, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# engine: batched correctness, refresh, errors, threading
+# ---------------------------------------------------------------------------
+
+
+def test_engine_serves_mix_correctly_and_counts():
+    mats = [exact(seed=1), exact(n=64, seed=2), exact(n=48, seed=3)]
+    eng = make_engine(max_batch=4)
+    rng = np.random.default_rng(0)
+    tickets = []
+    for i in range(10):
+        m = mats[i % 3 if i % 2 else 0]
+        tickets.append(eng.submit(f"t{i % 2}", m,
+                                  rng.integers(-4, 5, m.n).astype(np.float32)))
+    assert eng.drain() == 10
+    for t in tickets:
+        np.testing.assert_array_equal(
+            np.asarray(t.result(0)),
+            reference_solve(t.request.matrix,
+                            t.request.rhs).astype(np.float32))
+        assert t.done() and t.latency_s > 0
+    s = eng.stats()
+    assert s["requests"] == s["results"] == 10
+    assert s["coalesced_columns"] == 10 and s["queue_depth"] == 0
+    assert s["batches"] == s["solves"] and s["batches"] < 10  # real coalescing
+    assert s["session"]["analyses"] == 3  # one per pattern, ever
+
+
+def test_engine_hot_pattern_value_refresh_in_place():
+    """New values on the hot pattern are a factorize, not a re-analysis, and
+    the served results follow the new values."""
+    a = exact(seed=1)
+    a2 = st.dyadic(a, seed=7)
+    eng = make_engine()
+    b = st.dyadic_rhs(a.n)
+    t1 = eng.submit("t", a, b)
+    eng.drain()
+    t2 = eng.submit("t", a2, b)
+    eng.drain()
+    np.testing.assert_array_equal(
+        np.asarray(t1.result(0)), reference_solve(a, b).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(t2.result(0)), reference_solve(a2, b).astype(np.float32))
+    sess = eng.stats()["session"]
+    assert sess["analyses"] == 1 and sess["factorizes"] == 1
+
+
+def test_engine_routes_solve_errors_to_tickets(monkeypatch):
+    eng = make_engine()
+    a = exact()
+
+    def boom(*args, **kwargs):
+        raise RuntimeError("device fell over")
+
+    monkeypatch.setattr(eng.ctx, "solve", boom)
+    t = eng.submit("t", a, np.ones(a.n, np.float32))
+    assert eng.step() == 1  # the batch is consumed, not wedged
+    with pytest.raises(RuntimeError, match="device fell over"):
+        t.result(0)
+    s = eng.stats()
+    assert s["errors"] == 1 and s["queue_depth"] == 0
+    assert s.get("results", 0) == 0
+
+
+def test_engine_submit_shape_mismatch_raises():
+    eng = make_engine()
+    a = exact()
+    with pytest.raises(ValueError, match="rhs shape"):
+        eng.submit("t", a, np.ones(a.n + 1, np.float32))
+
+
+def test_engine_background_thread_serves_blocking_tenants():
+    a = exact()
+    eng = make_engine(max_batch=4, max_wait_s=0.01)
+    b = st.dyadic_rhs(a.n)
+    results = {}
+
+    def tenant(name):
+        t = eng.submit(name, a, b)
+        results[name] = np.asarray(t.result(timeout=30))
+
+    with eng:
+        threads = [threading.Thread(target=tenant, args=(f"t{i}",))
+                   for i in range(6)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+    ref = reference_solve(a, b).astype(np.float32)
+    assert len(results) == 6
+    for x in results.values():
+        np.testing.assert_array_equal(x, ref)
+    assert eng.stats()["queue_depth"] == 0
+    with pytest.raises(RuntimeError, match="already started"):
+        eng.start().start()
+    eng.stop()
+
+
+# ---------------------------------------------------------------------------
+# LRU-bounded session caches (ISSUE-9 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_cache_capacity_evicts_lru_with_counter():
+    mats = [exact(seed=s) for s in (1, 2, 3)]
+    reg = met.MetricsRegistry()
+    ctx = SpTRSVContext(mesh=st.mesh1(), options=PlanOptions(block_size=16),
+                        registry=reg, cache_capacity=2)
+    b = [st.dyadic_rhs(m.n) for m in mats]
+    h0 = ctx.analyse(mats[0])
+    ctx.solve(h0, b[0])
+    ctx.solve(ctx.analyse(mats[1]), b[1])
+    ctx.solve(h0, b[0])  # touch pattern 0: pattern 1 becomes the LRU entry
+    ctx.solve(ctx.analyse(mats[2]), b[2])  # evicts pattern 1
+    assert ctx.stats()["evictions"] == 1
+    assert reg.snapshot()["session.evictions"] == 1
+    assert len(ctx._entries) == 2
+    # the survivor is still a cache hit; the evicted pattern re-enters
+    # through the retained symbolic analysis (no new partition build)
+    analyses = ctx.stats()["analyses"]
+    ctx.analyse(mats[0])
+    h1 = ctx.analyse(mats[1])
+    ctx.solve(h1, b[1])
+    s = ctx.stats()
+    assert s["analyses"] == analyses  # symbolic cache absorbed the re-entry
+    assert s["symbolic_hits"] >= 1 and s["evictions"] == 2
+
+
+def test_cache_capacity_validation_and_unbounded_default():
+    with pytest.raises(ValueError, match="cache_capacity"):
+        SpTRSVContext(mesh=st.mesh1(), cache_capacity=0)
+    ctx = SpTRSVContext(mesh=st.mesh1(), registry=met.MetricsRegistry())
+    for s in (1, 2, 3):
+        a = exact(n=48, seed=s)
+        ctx.solve(ctx.analyse(a), st.dyadic_rhs(a.n))
+    assert ctx.stats().get("evictions", 0) == 0  # None = unbounded
+
+
+def test_engine_passes_capacity_through():
+    eng = make_engine(cache_capacity=1)
+    for s in (1, 2):
+        a = exact(n=48, seed=s)
+        eng.submit("t", a, np.ones(a.n, np.float32))
+    eng.drain()
+    assert eng.stats()["session"]["evictions"] == 1
